@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: CSV emission, budget-matched baselines."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timeit(fn, repeats: int = 3) -> float:
+    """Median wall seconds."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.time()
+        fn()
+        times.append(time.time() - t0)
+    return float(np.median(times))
+
+
+def save_rows(fname: str, header: list[str], rows: list[list]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, fname)
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path

@@ -1,0 +1,54 @@
+"""Kernel micro-benchmarks (XLA path timing on CPU; the Pallas path is the
+TPU target and is validated, not timed, in this container)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=10):
+    fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.time() - t0) / reps
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    b, k, r = 65536, 10, 8
+    f = jnp.asarray(rng.normal(size=(b, r)), jnp.float32)
+    m = jnp.asarray(rng.normal(size=(b, k, r, r)) * 0.2, jnp.float32)
+    l = jnp.asarray(rng.normal(size=(b, r)), jnp.float32)
+    fn = jax.jit(lambda a, bb, c: ops.tt_contract(a, bb, c, impl="ref"))
+    dt = _time(fn, f, m, l)
+    emit("kernel_tt_contract_ref", dt * 1e6, f"B={b};K={k};R={r};{b/dt/1e6:.1f}M entries/s")
+
+    t, h = 10, 16
+    x = jnp.asarray(rng.normal(size=(b, t, h)), jnp.float32)
+    wi = jnp.asarray(rng.normal(size=(h, 4 * h)) * 0.3, jnp.float32)
+    wh = jnp.asarray(rng.normal(size=(h, 4 * h)) * 0.3, jnp.float32)
+    bb = jnp.zeros((4 * h,), jnp.float32)
+    fn = jax.jit(lambda *a: ops.lstm_scan(*a, impl="ref"))
+    dt = _time(fn, x, wi, wh, bb)
+    emit("kernel_lstm_ref", dt * 1e6, f"B={b};T={t};H={h};{b/dt/1e6:.1f}M seq/s")
+
+    bq, s, hq, hkv, d = 1, 1024, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(bq, s, hq, d)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(bq, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(bq, s, hkv, d)), jnp.float32)
+    fn = jax.jit(lambda *a: ops.attention(*a, impl="ref"))
+    dt = _time(fn, q, kk, v, reps=3)
+    flops = 4 * bq * hq * s * s * d
+    emit("kernel_attention_ref", dt * 1e6, f"S={s};GQA{hq}/{hkv};{flops/dt/1e9:.1f}GFLOP/s")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Render the roofline table from the dry-run result JSONs.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single|multi]
+
+Markdown table: per (arch x shape x mesh) the three roofline terms, the
+dominant bound, peak per-device memory, the MODEL_FLOPS/HLO_FLOPS ratio,
+and the roofline fraction.  Used to build EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_all() -> list[dict]:
+    out = []
+    for path in glob.glob(os.path.join(RESULTS_DIR, "*.json")):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] == "skip":
+        return (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | skip | — | — | — | — | — | — |"
+        )
+    if r["status"] == "error":
+        return (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | — | — | — | — | — | — |"
+        )
+    rf = r["roofline"]
+    mem_gb = r["memory"]["peak_per_device"] / 1e9
+    fits = "yes" if mem_gb <= 16 else f"no ({mem_gb:.0f}GB)"
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} | {rf['dominant'].replace('_s','')} "
+        f"| {rf['compute_s']:.3g} | {rf['memory_s']:.3g} | {rf['collective_s']:.3g} "
+        f"| {r['useful_flops_ratio']:.2f} | {fits} | {rf['roofline_fraction']:.3f} |"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--rules", default=None)
+    args = ap.parse_args()
+    rows = load_all()
+    if args.mesh:
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+    if args.rules:
+        rows = [r for r in rows if r.get("rules") == args.rules]
+    shape_key = lambda s: SHAPE_ORDER.index(s) if s in SHAPE_ORDER else len(SHAPE_ORDER)
+    rows.sort(key=lambda r: (r["arch"], shape_key(r["shape"]), r["mesh"]))
+    print(
+        "| arch | shape | mesh | bound | compute_s | memory_s | collective_s "
+        "| useful/HLO | fits 16GB | roofline frac |"
+    )
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(fmt_row(r))
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+        coll = max(ok, key=lambda r: r["roofline"]["collective_s"])
+        print(
+            f"\nworst fraction: {worst['arch']} x {worst['shape']} x {worst['mesh']} "
+            f"({worst['roofline']['roofline_fraction']:.4f})"
+        )
+        print(
+            f"most collective-bound: {coll['arch']} x {coll['shape']} x {coll['mesh']} "
+            f"({coll['roofline']['collective_s']:.3g}s)"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""End-to-end training driver: a ~10M-param dense LM for a few hundred
+steps on synthetic data with the full production loop (WSD schedule,
+clipping, async checkpointing, auto-resume).
+
+(The assignment's ~100M-for-hundreds-of-steps variant needs more than one
+CPU core; on TPU this same driver scales by pointing --mesh at the pod.)
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import tempfile
+
+from repro.launch import train as train_launch
+
+
+def main():
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+    losses = train_launch.main([
+        "--arch", "minicpm-2b", "--smoke",
+        "--steps", "200", "--batch", "8", "--seq", "128",
+        "--lr", "3e-3", "--schedule", "wsd",
+        "--ckpt-dir", ckpt_dir, "--ckpt-every", "100",
+        "--log-every", "25",
+    ])
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+    print(f"checkpoints in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Finish the dry-run sweep for the remaining architectures."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.launch import dryrun  # noqa: E402
+
+cells = []
+for arch in ["mamba2-1.3b", "musicgen-medium", "internvl2-76b", "jamba-1.5-large-398b"]:
+    for shape in ["train_4k", "prefill_32k", "decode_32k", "long_500k"]:
+        for mesh in ["single", "multi"]:
+            cells.append((arch, shape, mesh))
+
+for arch, shape, mesh in cells:
+    path = dryrun.cell_path(arch, shape, mesh, "auto")
+    if os.path.exists(path):
+        print(f"skip done {arch} {shape} {mesh}", flush=True)
+        continue
+    try:
+        res = dryrun.run_cell(arch, shape, mesh, "auto", remat="full")
+    except Exception as e:  # noqa: BLE001
+        traceback.print_exc()
+        res = {"arch": arch, "shape": shape, "mesh": mesh, "rules": "auto",
+               "status": "error", "error": f"{type(e).__name__}: {e}"}
+    with open(path, "w") as f:
+        json.dump(res, f, indent=2)
+    print("WROTE", path, flush=True)
+print("SWEEP2 DONE")

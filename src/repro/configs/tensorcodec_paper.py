@@ -1,0 +1,8 @@
+"""TensorCodec's own compression configs (paper SS V): R/h presets used by
+the benchmarks and the codec dry-run cell."""
+from repro.core.codec import CodecConfig
+
+SMALL = CodecConfig(rank=6, hidden=12, epochs=120, batch_size=4096, lr=1e-2)
+MEDIUM = CodecConfig(rank=10, hidden=18, epochs=200, batch_size=8192, lr=1e-2)
+CONFIG = MEDIUM
+SMOKE = SMALL

@@ -1,0 +1,15 @@
+"""TensorCodec core: NTTD + folding + reordering, competitor baselines,
+and the real serializer.  See DESIGN.md §3-4."""
+from repro.core.codec import CodecConfig, CompressedTensor, CompressionLog, compress
+from repro.core.folding import FoldingSpec, make_folding_spec
+from repro.core.nttd import NTTDConfig
+
+__all__ = [
+    "CodecConfig",
+    "CompressedTensor",
+    "CompressionLog",
+    "compress",
+    "FoldingSpec",
+    "make_folding_spec",
+    "NTTDConfig",
+]

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: causal GQA flash attention (online softmax).
+
+Used by the LM serving/training path on TPU.  Classic three-loop flash
+structure: grid = (batch*q_heads, q_tiles, kv_tiles) with the kv axis
+innermost; running (m, l, acc) live in VMEM scratch and persist across the
+sequential TPU grid, so each q tile streams over kv tiles with no HBM
+round-trips for the softmax state.  GQA is handled in the BlockSpec index
+maps (q head -> kv head = h // group), so no head replication ever
+materializes.
+
+Block sizes default to (128, 128): MXU-aligned on both matmuls
+(q @ k^T and p @ v).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TILE_Q = 128
+DEFAULT_TILE_KV = 128
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+    causal: bool, q_offset: int, scale: float, tile_q: int, tile_kv: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale   # [TQ, D]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # [TKV, D]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)           # [TKV, D]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [TQ, TKV]
+
+    if causal:
+        qpos = qi * tile_q + jax.lax.broadcasted_iota(jnp.int32, (tile_q, tile_kv), 0)
+        kpos = ki * tile_kv + jax.lax.broadcasted_iota(jnp.int32, (tile_q, tile_kv), 1)
+        s = jnp.where(qpos + q_offset >= kpos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=1)[:, None]                # [TQ, 1]
+    m_next = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_next)
+    p = jnp.exp(s - m_next)                            # [TQ, TKV]
+    l_next = alpha * l_prev + jnp.sum(p, axis=1)[:, None]
+    m_scr[...] = m_next
+    l_scr[...] = l_next
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0, :, 0, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_offset", "tile_q", "tile_kv", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    tile_q: int = DEFAULT_TILE_Q,
+    tile_kv: int = DEFAULT_TILE_KV,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: [B, Sq, Hq, D]; k, v: [B, Skv, Hkv, D] -> [B, Sq, Hq, D]."""
+    bsz, sq, hq, dim = q.shape
+    _, skv, hkv, _ = k.shape
+    if sq % tile_q or skv % tile_kv:
+        raise ValueError(f"seq lengths ({sq},{skv}) not multiples of tiles")
+    group = hq // hkv
+    grid = (bsz * hq, sq // tile_q, skv // tile_kv)
+    scale = 1.0 / (dim**0.5)
+
+    kv_index = lambda bh, qi, ki: (bh // hq, ki, (bh % hq) // group, 0)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel,
+            causal=causal,
+            q_offset=q_offset,
+            scale=scale,
+            tile_q=tile_q,
+            tile_kv=tile_kv,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_q, 1, dim), lambda bh, qi, ki: (bh // hq, qi, bh % hq, 0)),
+            pl.BlockSpec((1, tile_kv, 1, dim), kv_index),
+            pl.BlockSpec((1, tile_kv, 1, dim), kv_index),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, tile_q, 1, dim), lambda bh, qi, ki: (bh // hq, qi, bh % hq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tile_q, 1), jnp.float32),
+            pltpu.VMEM((tile_q, 1), jnp.float32),
+            pltpu.VMEM((tile_q, dim), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

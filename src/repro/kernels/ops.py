@@ -1,0 +1,113 @@
+"""Backend-dispatching wrappers around the Pallas kernels.
+
+``impl`` selects the execution path:
+  * "ref"               — pure-jnp oracle (XLA).  Default on CPU.
+  * "pallas"            — compiled Pallas kernel.  Default on TPU.
+  * "pallas_interpret"  — Pallas kernel body interpreted in Python
+                          (correctness validation on CPU).
+  * "auto"              — "pallas" on TPU else "ref".
+
+Wrappers also handle batch padding so callers never worry about tile
+divisibility.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import attention as _attention
+from repro.kernels import lstm as _lstm
+from repro.kernels import ref as _ref
+from repro.kernels import tt_contract as _tt
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def _pad_batch(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
+    bsz = x.shape[0]
+    pad = (-bsz) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    return x, bsz
+
+
+def tt_contract(
+    first: jax.Array,
+    mid: jax.Array,
+    last: jax.Array,
+    *,
+    impl: str = "auto",
+    tile_b: int | None = None,
+) -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.tt_contract(first, mid, last)
+    if impl == "ref_unrolled":
+        return _ref.tt_contract_unrolled(first, mid, last)
+    if mid.shape[1] == 0:
+        # degenerate 2-core chain: no mid tensor to tile (zero-size blocks
+        # break pallas); the contraction is a plain row dot
+        return jnp.sum(first * last, axis=-1)
+    tile = tile_b or min(_tt.DEFAULT_TILE_B, max(8, first.shape[0]))
+    f, bsz = _pad_batch(first, tile)
+    m, _ = _pad_batch(mid, tile)
+    l, _ = _pad_batch(last, tile)
+    out = _tt.tt_contract(f, m, l, tile_b=tile, interpret=impl == "pallas_interpret")
+    return out[:bsz]
+
+
+def lstm_scan(
+    x: jax.Array,
+    wi: jax.Array,
+    wh: jax.Array,
+    b: jax.Array,
+    *,
+    impl: str = "auto",
+    tile_b: int | None = None,
+) -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.lstm_scan(x, wi, wh, b)
+    if impl == "ref_unrolled":
+        # XLA-path fusion lever: unrolling the d' ~ 8..12 steps lets XLA
+        # fuse gate math across steps instead of round-tripping the carry
+        # through the while-loop boundary (the same motivation as the
+        # Pallas kernel, achievable without Pallas)
+        return _ref.lstm_unrolled(x, wi, wh, b)
+    tile = tile_b or min(_lstm.DEFAULT_TILE_B, max(8, x.shape[0]))
+    xp, bsz = _pad_batch(x, tile)
+    out = _lstm.lstm_scan(xp, wi, wh, b, tile_b=tile, interpret=impl == "pallas_interpret")
+    return out[:bsz]
+
+
+CHUNKED_THRESHOLD = 2048  # switch the XLA path to q-chunked attention
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    kv_len: jax.Array | None = None,
+    impl: str = "auto",
+) -> jax.Array:
+    impl = _resolve(impl)
+    if impl in ("ref", "chunked") or kv_len is not None or q.shape[1] % 128 or k.shape[1] % 128:
+        # variable-length and non-tile-aligned cases use the oracle path
+        if kv_len is None and (
+            impl == "chunked" or q.shape[1] >= CHUNKED_THRESHOLD
+        ):
+            return _ref.mha_attention_chunked(q, k, v, causal=causal, q_offset=q_offset)
+        return _ref.mha_attention(q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len)
+    return _attention.flash_attention(
+        q, k, v, causal=causal, q_offset=q_offset,
+        interpret=impl == "pallas_interpret",
+    )

@@ -1,0 +1,169 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each Pallas kernel is validated
+against the function of the same name here (interpret=True on CPU,
+compiled on TPU).  They are also the execution path used on non-TPU
+backends (tests, benches, the CPU dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------------
+# TT-core chain contraction (NTTD, Alg. 2 line 8)
+# ----------------------------------------------------------------------------
+def tt_contract(first: jax.Array, mid: jax.Array, last: jax.Array) -> jax.Array:
+    """Chain product  T1 @ T2 @ ... @ Td  per batch element.
+
+    first: [B, R]        (T1, shape 1xR squeezed)
+    mid:   [B, K, R, R]  (T2..T_{d-1}); K may be 0
+    last:  [B, R]        (Td, shape Rx1 squeezed)
+    returns [B]
+    """
+    def step(v, m):
+        # v: [B, R], m: [B, R, R] -> [B, R]
+        return jnp.einsum("br,brs->bs", v, m), None
+
+    if mid.shape[1] == 0:
+        v = first
+    else:
+        v, _ = jax.lax.scan(step, first, jnp.moveaxis(mid, 1, 0))
+    return jnp.sum(v * last, axis=-1)
+
+
+def tt_contract_unrolled(first: jax.Array, mid: jax.Array, last: jax.Array) -> jax.Array:
+    """Chain product with the K loop unrolled (K is tiny for NTTD); XLA
+    fuses the whole chain into one kernel instead of K loop iterations."""
+    v = first
+    for k in range(mid.shape[1]):
+        v = jnp.einsum("br,brs->bs", v, mid[:, k])
+    return jnp.sum(v * last, axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# Fused LSTM scan (NTTD, Alg. 2 line 3)
+# ----------------------------------------------------------------------------
+def lstm_scan(
+    x: jax.Array, wi: jax.Array, wh: jax.Array, b: jax.Array
+) -> jax.Array:
+    """Single-layer LSTM over a short sequence.
+
+    x:  [B, T, H]  input embeddings
+    wi: [H, 4H]    input->gates
+    wh: [H, 4H]    hidden->gates
+    b:  [4H]       gate bias
+    returns hidden states [B, T, H]
+
+    Gate layout along the 4H axis: (i, f, g, o).
+    """
+    bsz, _, hid = x.shape
+
+    def step(carry, xt):
+        h, c = carry
+        gates = xt @ wi + h @ wh + b
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    init = (
+        jnp.zeros((bsz, hid), dtype=x.dtype),
+        jnp.zeros((bsz, hid), dtype=x.dtype),
+    )
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def lstm_unrolled(
+    x: jax.Array, wi: jax.Array, wh: jax.Array, b: jax.Array
+) -> jax.Array:
+    """Same semantics as lstm_scan with the time loop unrolled in Python
+    (T is tiny for NTTD); XLA fuses across steps."""
+    bsz, t_steps, hid = x.shape
+    h = jnp.zeros((bsz, hid), dtype=x.dtype)
+    c = jnp.zeros((bsz, hid), dtype=x.dtype)
+    outs = []
+    for t in range(t_steps):
+        gates = x[:, t] @ wi + h @ wh + b
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        outs.append(h)
+    return jnp.stack(outs, axis=1)
+
+
+# ----------------------------------------------------------------------------
+# Causal GQA attention (LM serving/training path)
+# ----------------------------------------------------------------------------
+def mha_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    kv_len: jax.Array | None = None,
+) -> jax.Array:
+    """Grouped-query attention oracle.
+
+    q: [B, Sq, Hq, D]; k, v: [B, Skv, Hkv, D] with Hq % Hkv == 0.
+    ``q_offset``: absolute position of q[0] (decode: cache length so far).
+    ``kv_len``: optional [B] valid kv lengths (entries beyond are masked).
+    Softmax in f32; output in q.dtype.
+    """
+    bq, sq, hq, dim = q.shape
+    _, skv, hkv, _ = k.shape
+    group = hq // hkv
+    qf = q.astype(jnp.float32) / jnp.sqrt(dim).astype(jnp.float32)
+    qg = qf.reshape(bq, sq, hkv, group, dim)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    mask = None
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(skv)
+        mask = qpos[:, None] >= kpos[None, :]  # [Sq, Skv]
+        mask = mask[None, None, None]
+    if kv_len is not None:
+        valid = jnp.arange(skv)[None, :] < kv_len[:, None]  # [B, Skv]
+        valid = valid[:, None, None, None, :]
+        mask = valid if mask is None else jnp.logical_and(mask, valid)
+    if mask is not None:
+        logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(bq, sq, hq, dim).astype(q.dtype)
+
+
+def mha_attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    chunk: int = 512,
+) -> jax.Array:
+    """Memory-bounded exact attention: scan over q chunks, rematerialized.
+
+    The [B, H, chunk, Skv] score block is the peak transient instead of the
+    full [B, H, Sq, Skv] — this is the XLA-path equivalent of the flash
+    kernel's working-set bound and the configuration the dry-run lowers for
+    long sequences.
+    """
+    bq, sq, hq, dim = q.shape
+    if sq % chunk or sq <= chunk:
+        return mha_attention(q, k, v, causal=causal, q_offset=q_offset)
+
+    def body(carry, qc_and_off):
+        qc, off = qc_and_off
+        out = mha_attention(qc, k, v, causal=causal, q_offset=off)
+        return carry, out
+
+    body = jax.checkpoint(body)
+    nq = sq // chunk
+    qs = jnp.moveaxis(q.reshape(bq, nq, chunk, hq, dim), 1, 0)  # [nq,B,chunk,H,D]
+    offs = q_offset + jnp.arange(nq) * chunk
+    _, outs = jax.lax.scan(body, (), (qs, offs))
+    return jnp.moveaxis(outs, 0, 1).reshape(bq, sq, hq, dim)

@@ -1,0 +1,389 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract roofline terms from the compiled artifact.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-coder-33b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        [--skip-done] [--rules base|fsdp]
+
+Each cell writes benchmarks/results/dryrun/<arch>__<shape>__<mesh>__<rules>.json
+with memory analysis, per-device HLO flops/bytes, per-device collective
+bytes (parsed from the optimized HLO), and the three roofline terms.
+"""
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices; jax
+# locks the device count at first init, so this precedes every import.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.dist import sharding
+from repro.launch import mesh as mesh_lib
+from repro.models import model
+from repro.optim import optimizers
+from repro.train import step as step_lib
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "results", "dryrun"
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# bytes multiplier per collective kind (ring algorithms, per-device traffic)
+_COLL_FACTOR = {
+    "all-reduce": 2.0,        # reduce-scatter + all-gather phases
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred|c64|c128)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_per_device(hlo_text: str, by_dtype: bool = False) -> dict[str, float]:
+    """Parse optimized (post-SPMD) HLO; shapes are per-partition.
+
+    ``by_dtype=True`` adds 'kind:dtype' keys (diagnosis: are the FSDP
+    gathers moving bf16 or f32?)."""
+    out: dict[str, float] = {k: 0.0 for k in _COLL_FACTOR}
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind, _start = m.groups()
+        out[kind] += _shape_bytes(type_str) * _COLL_FACTOR[kind]
+        if by_dtype:
+            for dtype, dims in _SHAPE_RE.findall(type_str):
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                key = f"{kind}:{dtype}"
+                out[key] = out.get(key, 0.0) + n * _DTYPE_BYTES[dtype] * _COLL_FACTOR[kind]
+    out["total"] = sum(v for k, v in out.items() if ":" not in k)
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs (6ND train, 2ND inference) on ACTIVE params."""
+    n_active = model.param_count(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def auto_rules(cfg, shape) -> str:
+    """Weights + optimizer must fit 16GB/chip alongside activations: big
+    models shard weights over the DP axes too (FSDP rules)."""
+    n = model.param_count(cfg)
+    if shape.kind == "train":
+        return "fsdp" if n >= 10e9 else "base"
+    return "fsdp" if n * 2 / 16 >= 12e9 else "base"  # bf16 over 16-way TP
+
+
+def should_skip(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return "full-attention arch: long_500k requires sub-quadratic decode (DESIGN.md §6)"
+    return None
+
+
+def build_cell(arch: str, shape_name: str, mesh, rules_name: str = "base",
+               remat: str | None = None, seq_shard: bool | None = None,
+               depth_blocks: int | None = None):
+    """Lower one cell.  Returns (lowered, cfg, shape).
+
+    ``depth_blocks`` builds a depth-reduced UNROLLED variant: XLA's
+    cost_analysis does not multiply while-loop bodies by trip count, so the
+    scanned production program under-reports FLOPs/collectives
+    ~n_layers-fold.  measure_cell compiles unrolled 1- and 3-block programs
+    and extrapolates linearly (blocks are identical); memory comes from the
+    scanned full-depth program, which is also the fits-on-chip proof.
+    """
+    import dataclasses as _dc
+
+    cfg = configs.get(arch)
+    shape_cfg = SHAPES[shape_name]
+    if shape_cfg.kind != "train":
+        # serving runs bf16 weights (no optimizer master copies)
+        cfg = _dc.replace(cfg, param_dtype="bfloat16")
+    if depth_blocks is not None:
+        cfg = _dc.replace(
+            cfg, n_layers=cfg.block_size * depth_blocks, scan_layers=False
+        )
+    if remat:
+        cfg = _dc.replace(cfg, remat=remat)
+    shape = SHAPES[shape_name]
+    if rules_name == "auto":
+        rules_name = auto_rules(cfg, shape)
+    base = sharding.BASE_RULES if rules_name == "base" else sharding.FSDP_RULES
+    rules = step_lib.effective_rules(mesh, shape, base, cfg)
+    if seq_shard is not None:
+        rules["seq"] = "model" if seq_shard else None
+    ab_params = model.abstract_params(cfg)
+    ps = step_lib.param_shardings(mesh, cfg, rules)
+    batch_spec = step_lib.input_specs(cfg, shape)
+    bs = step_lib.batch_shardings(mesh, cfg, batch_spec, rules)
+    long_ctx = rules.get("batch") is None
+
+    with sharding.sharding_ctx(mesh, rules):
+        if shape.kind == "train":
+            opt = optimizers.adamw(1e-4, weight_decay=0.1, max_grad_norm=1.0)
+            fn = step_lib.make_train_step(cfg, opt)
+            ab_opt = step_lib.abstract_opt_state(cfg)
+            os_ = step_lib.opt_shardings(mesh, cfg, rules)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(ps, os_, bs),
+                donate_argnums=(0, 1),
+            ).lower(ab_params, ab_opt, batch_spec)
+        elif shape.kind == "prefill":
+            fn = step_lib.make_prefill_step(cfg)
+            ab_cache = model.abstract_cache(
+                cfg, shape.global_batch, shape.seq_len, long_ctx
+            )
+            cs = step_lib.cache_shardings(
+                mesh, cfg, shape.global_batch, shape.seq_len, long_ctx, rules
+            )
+            lowered = jax.jit(
+                fn, in_shardings=(ps, cs, bs), donate_argnums=(1,)
+            ).lower(ab_params, ab_cache, batch_spec)
+        else:  # decode
+            fn = step_lib.make_decode_step(cfg)
+            ab_cache = model.abstract_cache(
+                cfg, shape.global_batch, shape.seq_len, long_ctx
+            )
+            cs = step_lib.cache_shardings(
+                mesh, cfg, shape.global_batch, shape.seq_len, long_ctx, rules
+            )
+            lowered = jax.jit(
+                fn, in_shardings=(ps, cs, bs, step_lib.replicated(mesh)),
+                donate_argnums=(1,),
+            ).lower(
+                ab_params, ab_cache, batch_spec,
+                jax.ShapeDtypeStruct((), jnp.int32),
+            )
+    return lowered, cfg, shape
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, rules_name: str = "base",
+             verbose: bool = True, remat: str | None = None,
+             seq_shard: bool | None = None) -> dict:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    skip = should_skip(cfg, shape)
+    result: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "rules": rules_name,
+    }
+    if skip:
+        result["status"] = "skip"
+        result["reason"] = skip
+        return result
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=mesh_name == "multi")
+    n_dev = mesh.size
+
+    # --- pass 1: scanned full-depth production program -> memory proof -----
+    t0 = time.time()
+    lowered, cfg, shape = build_cell(arch, shape_name, mesh, rules_name, remat, seq_shard)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+
+    # --- pass 2: unrolled depth-1/3 programs -> exact per-block costs ---------
+    def costs(depth):
+        low, dcfg, _ = build_cell(
+            arch, shape_name, mesh, rules_name, remat, seq_shard, depth_blocks=depth
+        )
+        comp = low.compile()
+        cost = comp.cost_analysis()
+        coll = collective_bytes_per_device(comp.as_text())
+        return (
+            float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            coll,
+        )
+
+    # depth-1 programs get anomalous partitioning choices; depths >= 2 are
+    # stable (validated: per-block deltas from (2,3) and (4,6) agree <1%).
+    # Wide blocks (jamba: 8 mixed sublayers/block) use (1,2) — a depth-4
+    # unrolled hybrid program (32 layers) takes >30 min to compile on this
+    # container; the depth-1 anomaly is small relative to an 8-sublayer
+    # block (validated on the hybrid smoke config).
+    t0 = time.time()
+    d_lo, d_hi = (1, 2) if cfg.block_size >= 8 else (2, 4)
+    f2, b2, c2 = costs(d_lo)
+    f4, b4, c4 = costs(d_hi)
+    t_cost = time.time() - t0
+    nb = cfg.n_blocks
+    span = d_hi - d_lo
+    extrap = lambda v2, v4: v2 + (nb - d_lo) * (v4 - v2) / span
+    flops_dev = extrap(f2, f4)
+    bytes_dev = extrap(b2, b4)
+    coll = {k: extrap(c2[k], c4[k]) for k in c2}
+    mf = model_flops(cfg, shape)
+
+    compute_s = flops_dev / mesh_lib.PEAK_FLOPS_BF16
+    memory_s = bytes_dev / mesh_lib.HBM_BW
+    collective_s = coll["total"] / mesh_lib.ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    # roofline fraction: ideal step time / modelled step time.  Ideal is the
+    # max of the compute-side bound (useful FLOPs at peak) and the memory-
+    # side bound (every resident argument byte read once per step) — the
+    # latter is what decode is limited by.
+    ideal_compute_s = (mf / n_dev) / mesh_lib.PEAK_FLOPS_BF16
+    ideal_memory_s = mem.argument_size_in_bytes / mesh_lib.HBM_BW
+    ideal_s = max(ideal_compute_s, ideal_memory_s)
+    result.update(
+        status="ok",
+        n_devices=n_dev,
+        n_blocks=nb,
+        seconds_lower=round(t_lower, 2),
+        seconds_compile=round(t_compile, 2),
+        seconds_cost_passes=round(t_cost, 2),
+        remat=remat or cfg.remat,
+        seq_shard=seq_shard,
+        memory={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+            "peak_per_device": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        flops_per_device=flops_dev,
+        hlo_bytes_per_device=bytes_dev,
+        collective_bytes_per_device=coll,
+        model_flops=mf,
+        hlo_flops_total=flops_dev * n_dev,
+        useful_flops_ratio=mf / max(flops_dev * n_dev, 1.0),
+        roofline=dict(
+            terms,
+            dominant=dominant,
+            bound_s=bound_s,
+            ideal_compute_s=ideal_compute_s,
+            ideal_memory_s=ideal_memory_s,
+            ideal_s=ideal_s,
+            roofline_fraction=ideal_s / bound_s if bound_s > 0 else 0.0,
+        ),
+    )
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name} x {rules_name}]")
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s cost-passes {t_cost:.1f}s")
+        print(f"  memory_analysis: {mem}")
+        print(
+            "  cost_analysis: flops/dev={:.3e} bytes/dev={:.3e}".format(
+                flops_dev, bytes_dev
+            )
+        )
+        print(
+            "  collectives/dev: "
+            + " ".join(f"{k}={v:.3e}" for k, v in coll.items() if v)
+        )
+        print(
+            "  roofline: compute={compute_s:.4f}s memory={memory_s:.4f}s "
+            "collective={collective_s:.4f}s".format(**terms)
+            + f" dominant={dominant} fraction={result['roofline']['roofline_fraction']:.3f}"
+        )
+    return result
+
+
+def cell_path(arch, shape, mesh, rules):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh}__{rules}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--rules", default="auto", choices=["auto", "base", "fsdp"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--remat", default=None, choices=[None, "none", "dots", "full"])
+    ap.add_argument("--seq-shard", default=None, type=int, choices=[0, 1])
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [
+            (a, s, m)
+            for a in configs.ARCH_IDS
+            for s in SHAPES
+            for m in meshes
+        ]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = 0
+    for arch, shape, mesh_name in cells:
+        path = cell_path(arch, shape, mesh_name, args.rules)
+        if args.skip_done and os.path.exists(path):
+            print(f"skip (done): {arch} x {shape} x {mesh_name}")
+            continue
+        try:
+            res = run_cell(
+                arch, shape, mesh_name, args.rules,
+                remat=args.remat,
+                seq_shard=None if args.seq_shard is None else bool(args.seq_shard),
+            )
+        except Exception as e:  # noqa: BLE001 — record and continue the sweep
+            traceback.print_exc()
+            res = {
+                "arch": arch, "shape": shape, "mesh": mesh_name,
+                "rules": args.rules, "status": "error", "error": f"{type(e).__name__}: {e}",
+            }
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2)
+    print(f"done: {len(cells)} cells, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

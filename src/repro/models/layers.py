@@ -1,0 +1,120 @@
+"""Shared layers: RMSNorm, RoPE, SwiGLU MLP, embedding/unembedding.
+
+All functions are pure; weights come in as pytree leaves annotated with
+logical axes via ParamSpec (see models/*.py `*_specs` builders).  Compute
+runs in ``compute_dtype`` (bf16 on TPU); norms and softmax accumulate f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec, shard
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[
+        name
+    ]
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm_spec(d: int, stacked: tuple[int, ...] = ()) -> ParamSpec:
+    lead = tuple("layers" for _ in stacked)
+    return ParamSpec(stacked + (d,), lead + ("act_embed",), init="ones")
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [S] or [B, S] absolute positions."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [S, half] or [B,S,half]
+    if ang.ndim == 2:  # [S, half] -> broadcast over batch
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]  # [B_or_1, S, 1, half]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def mlp_specs(d: int, f: int, stacked: tuple[int, ...] = ()) -> dict:
+    lead = tuple("layers" for _ in stacked)
+    return {
+        "w_gate": ParamSpec(stacked + (d, f), lead + ("ffn_in", "mlp")),
+        "w_up": ParamSpec(stacked + (d, f), lead + ("ffn_in", "mlp")),
+        "w_down": ParamSpec(stacked + (f, d), lead + ("mlp", "ffn_in")),
+    }
+
+
+def mlp(p: dict, x: jax.Array, compute_dtype) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(compute_dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(compute_dtype))
+    h = jax.nn.silu(h) * u
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+VOCAB_PAD = 128  # Megatron-style: pad vocab so TP always divides
+
+
+def padded_vocab(vocab: int) -> int:
+    return ((vocab + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+
+def embed_specs(vocab: int, d: int, tie: bool) -> dict:
+    pv = padded_vocab(vocab)
+    out = {"embed": ParamSpec((pv, d), ("vocab", "embed"), init="embed")}
+    if not tie:
+        out["unembed"] = ParamSpec((d, pv), ("embed", "vocab"))
+    return out
+
+
+def embed_lookup(p: dict, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return p["embed"].astype(compute_dtype)[tokens]
+
+
+def unembed(p: dict, x: jax.Array, compute_dtype) -> jax.Array:
+    if "unembed" in p:
+        w = p["unembed"].astype(compute_dtype)
+    else:
+        w = p["embed"].astype(compute_dtype).T
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def softmax_xent(
+    logits: jax.Array, labels: jax.Array, valid_vocab: int | None = None
+) -> jax.Array:
+    """Mean token cross-entropy; logits promoted to f32.  ``valid_vocab``
+    masks padded vocabulary columns out of the partition function."""
+    logits = logits.astype(jnp.float32)
+    if valid_vocab is not None and valid_vocab < logits.shape[-1]:
+        mask = jnp.arange(logits.shape[-1]) < valid_vocab
+        logits = jnp.where(mask, logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,84 @@
+"""NTTD-compressed embedding layer (paper <-> LM integration #2).
+
+Stores NTTD parameters instead of the full [vocab, d] table and
+reconstructs only the looked-up rows on the fly — the TT-Rec idea with the
+paper's neural generator.  For qwen1.5-4b (152k x 2560 = 389M entries,
+1.5GB in f32) an R=8/h=16 NTTD payload is ~1000x smaller; quality is
+whatever fitness the offline fit achieved (lossy; measured in
+examples/compressed_embedding.py).
+
+The row reconstruction is a batched NTTD decode: token id i -> original
+row index -> folded indices of all d columns -> chain products.  Lookup
+cost is O(S * d * d' * (h^2 + hR^2)) — serving-practical for prompt
+encoding; decode looks up one row per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec as codec_lib
+from repro.core import nttd
+from repro.core.folding import FoldingSpec
+
+
+@dataclasses.dataclass
+class NTTDEmbedding:
+    """Frozen compressed embedding (built offline from a trained table)."""
+
+    ct: codec_lib.CompressedTensor
+    vocab: int
+    d_model: int
+
+    @classmethod
+    def fit(cls, table: np.ndarray, rank: int = 8, hidden: int = 16,
+            epochs: int = 150, seed: int = 0, lr: float = 2e-2,
+            batch_size: int = 2048, reorder: bool = True) -> "NTTDEmbedding":
+        # reordering matters here: embedding rows have cluster structure but
+        # arbitrary ids — exactly the paper's argument for pi (token-id
+        # remapping costs one permutation, stored in the payload)
+        ct, _ = codec_lib.compress(
+            table.astype(np.float32),
+            codec_lib.CodecConfig(
+                rank=rank, hidden=hidden, epochs=epochs, seed=seed, lr=lr,
+                batch_size=min(batch_size, table.size),
+                entries_per_epoch=min(table.size, 4_000_000),
+                init_reorder=reorder, update_reorder=reorder,
+                # space out pi sweeps: each one reinitializes Adam (paper
+                # Alg. 1), so theta needs room to converge in between
+                reorder_every=10, reorder_warmup=30,
+                patience=40,
+            ),
+        )
+        return cls(ct=ct, vocab=table.shape[0], d_model=table.shape[1])
+
+    def lookup(self, token_ids: jax.Array) -> jax.Array:
+        """token_ids [B, S] -> embeddings [B, S, d] (reconstructed)."""
+        b, s = token_ids.shape
+        flat = token_ids.reshape(-1)
+        # positions in the reordered tensor
+        inv_rows = jnp.asarray(np.argsort(self.ct.pi[0]))
+        inv_cols = jnp.asarray(np.argsort(self.ct.pi[1]))
+        rows = inv_rows[flat]                                   # [B*S]
+        cols = inv_cols[jnp.arange(self.d_model)]               # [d]
+        pos = jnp.stack(
+            [
+                jnp.repeat(rows, self.d_model),
+                jnp.tile(cols, flat.shape[0]),
+            ],
+            axis=1,
+        )
+        vals = nttd.apply_at_positions(
+            self.ct.params, pos.astype(jnp.int32), self.ct.spec, self.ct.cfg
+        )
+        vals = vals * self.ct.norm_std + self.ct.norm_mean
+        return vals.reshape(b, s, self.d_model)
+
+    def payload_bytes(self) -> int:
+        return self.ct.payload_bytes(4)
+
+    def raw_bytes(self) -> int:
+        return self.vocab * self.d_model * 4

@@ -1,0 +1,19 @@
+from repro.optim.optimizers import (
+    adam,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.schedules import constant, cosine, wsd
+
+__all__ = [
+    "adam",
+    "adamw",
+    "apply_updates",
+    "global_norm",
+    "clip_by_global_norm",
+    "constant",
+    "cosine",
+    "wsd",
+]

@@ -1,0 +1,40 @@
+"""Learning-rate schedules: constant, cosine, and WSD.
+
+WSD (warmup-stable-decay) is included because the assigned ``minicpm-2b``
+architecture trains with it (arXiv:2404.06395).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0, min_ratio: float = 0.1):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        cos = lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched
+
+
+def wsd(lr: float, total_steps: int, warmup: int = 0, decay_frac: float = 0.1,
+        min_ratio: float = 0.01):
+    """Warmup -> stable plateau -> linear decay over the last decay_frac."""
+    decay_steps = max(int(total_steps * decay_frac), 1)
+    decay_start = total_steps - decay_steps
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - decay_start) / decay_steps, 0, 1)
+        dec = lr * (1 - (1 - min_ratio) * frac)
+        out = jnp.where(step < warmup, warm, jnp.asarray(lr, jnp.float32))
+        return jnp.where(step > decay_start, dec, out)
+
+    return sched

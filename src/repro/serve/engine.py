@@ -1,0 +1,127 @@
+"""Batched serving engine: fixed-slot continuous batching.
+
+The engine owns a KV cache of B slots x max_len.  Requests queue up;
+whenever a slot frees (sequence finished), the next request is prefilled
+into that slot and decoding continues for the whole batch.  This is the
+slot-based continuous batching used by production engines, minus paging
+(slot granularity = full sequence; the dry-run's decode_32k cell is one
+engine step at scale).
+
+Greedy sampling by default; temperature optional.  All compute paths are
+the pjit-able step functions from repro.train.step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # [S] token ids
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: list[int]
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int, max_len: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: deque[Request] = deque()
+        self.results: list[Result] = []
+        # per-slot state
+        self.slot_req: list[Request | None] = [None] * batch_slots
+        self.slot_len = np.zeros(batch_slots, np.int32)
+        self.slot_new = np.zeros(batch_slots, np.int32)
+        self.slot_out: list[list[int]] = [[] for _ in range(batch_slots)]
+        self.cache = model.init_cache(cfg, 1, max_len)  # per-slot caches
+        self.caches = [model.init_cache(cfg, 1, max_len) for _ in range(batch_slots)]
+        self.last_tok = np.zeros(batch_slots, np.int32)
+
+        self._decode = jax.jit(
+            lambda p, c, t, ln: model.decode_step(
+                p, cfg, token=t, cache=c, cache_len=ln
+            )
+        )
+        self._prefill = jax.jit(
+            lambda p, c, t: model.prefill(p, cfg, tokens=t, cache=c)
+        )
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self) -> list[Result]:
+        """Run until queue and slots drain.  Returns completed results."""
+        while self.queue or any(r is not None for r in self.slot_req):
+            self._fill_slots()
+            self._decode_tick()
+        return self.results
+
+    # ------------------------------------------------------------- internals
+    def _fill_slots(self) -> None:
+        for i in range(self.slots):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.popleft()
+                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                logits, cache = self._prefill(self.params, self.caches[i], toks)
+                self.caches[i] = cache
+                self.slot_req[i] = req
+                self.slot_len[i] = len(req.prompt)
+                self.slot_new[i] = 0
+                self.slot_out[i] = []
+                self.last_tok[i] = self._sample(logits[0, -1])
+
+    def _sample(self, logits: jax.Array) -> int:
+        logits = np.asarray(logits, np.float32)[: self.cfg.vocab]
+        if self.temperature <= 0:
+            return int(logits.argmax())
+        self.key, sub = jax.random.split(self.key)
+        probs = jax.nn.softmax(jnp.asarray(logits) / self.temperature)
+        return int(jax.random.choice(sub, logits.shape[0], p=probs))
+
+    def _decode_tick(self) -> None:
+        for i in range(self.slots):
+            req = self.slot_req[i]
+            if req is None:
+                continue
+            tok = self.last_tok[i]
+            self.slot_out[i].append(int(tok))
+            done = (
+                len(self.slot_out[i]) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id)
+                or self.slot_len[i] + 1 >= self.max_len
+            )
+            if done:
+                self.results.append(Result(req.uid, self.slot_out[i]))
+                self.slot_req[i] = None
+                continue
+            logits, cache = self._decode(
+                self.params,
+                self.caches[i],
+                jnp.asarray([[tok]], jnp.int32),
+                jnp.int32(self.slot_len[i]),
+            )
+            self.caches[i] = cache
+            self.slot_len[i] += 1
+            self.last_tok[i] = self._sample(logits[0, -1])

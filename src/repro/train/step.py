@@ -1,0 +1,194 @@
+"""Step factories: train / prefill / decode, with sharding trees for pjit.
+
+These are shared by the real trainer (launch/train.py), the serving engine
+(repro.serve), and the multi-pod dry-run (launch/dryrun.py) — the dry-run
+lowers exactly the program production would run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import sharding
+from repro.models import layers, model
+from repro.optim import optimizers
+from repro.optim.optimizers import AdamState
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, opt, grad_transform=None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_transform(grads) -> grads`` hooks gradient compression (see
+    repro.dist.grad_compress) between backprop and the optimizer.
+    """
+
+    compute_dt = layers.dtype_of(cfg.compute_dtype)
+    param_dt = layers.dtype_of(cfg.param_dtype)
+
+    def train_step(params, opt_state, batch):
+        def loss_with_cast(p, batch):
+            if param_dt != compute_dt:
+                # cast the SHARDED master weights once; every downstream
+                # FSDP all-gather then moves bf16, not f32 (2x less ICI
+                # traffic and 2x smaller gathered live set)
+                p = jax.tree.map(lambda w: w.astype(compute_dt), p)
+            return model.loss_fn(p, cfg, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_with_cast, has_aux=True)(
+            params, batch
+        )
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = optimizers.apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = optimizers.global_norm(grads)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, cache, batch):
+        logits, cache = model.prefill(
+            params,
+            cfg,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            cache=cache,
+        )
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, batch, cache_len):
+        logits, cache = model.decode_step(
+            params,
+            cfg,
+            token=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            cache=cache,
+            cache_len=cache_len,
+        )
+        return logits, cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Abstract model inputs for one (arch x shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    ct = layers.dtype_of(cfg.compute_dtype)
+    if shape.kind == "train":
+        batch: dict[str, Any] = {"labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.input_kind == "embeddings":
+            batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), ct)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.input_kind == "embeddings":
+            return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), ct)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    # decode: one new token against a cache of length s
+    if cfg.input_kind == "embeddings":
+        return {"embeds": jax.ShapeDtypeStruct((b, 1, cfg.d_model), ct)}
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def abstract_opt_state(cfg: ModelConfig) -> AdamState:
+    ab = model.abstract_params(cfg)
+    f32 = lambda t: jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    return AdamState(
+        step=jax.ShapeDtypeStruct((), jnp.int32), mu=f32(ab), nu=f32(ab)
+    )
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+def effective_rules(
+    mesh: Mesh,
+    shape: ShapeConfig,
+    base: dict | None = None,
+    cfg: ModelConfig | None = None,
+) -> dict:
+    """Adjust the rules table to the cell:
+    * global batch cannot fill the DP axes (long-context decode) ->
+      replicate batch, spread the KV length over 'data' (SP flash-decode);
+    * head count cannot take the TP axis -> context-parallel attention
+      (q/scores sharded on 'seq_attn' -> 'model')."""
+    rules = dict(base or sharding.BASE_RULES)
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            dp *= mesh.shape[ax]
+    if shape.global_batch % dp != 0:
+        rules["batch"] = None
+        rules["kv_seq"] = "data"
+    elif shape.kind in ("prefill", "decode") and "model" in mesh.axis_names:
+        # flash-decode sharding: no assigned arch has KV heads divisible by
+        # the 16-way TP axis, so the cache shards its LENGTH over 'model'
+        # and XLA partitions the softmax reduction (partial-max/denominator
+        # combine).  Without this a 32k x 128-seq cache replicates ~33GB/dev.
+        rules["kv_seq"] = "model"
+    if (
+        cfg is not None
+        and cfg.n_heads
+        and "model" in mesh.axis_names
+        and cfg.n_heads % mesh.shape["model"] != 0
+    ):
+        rules["seq_attn"] = "model"
+        if shape.kind == "train":
+            # Megatron-style sequence parallelism on the residual stream:
+            # required to fit the activation working set when attention
+            # cannot be head-sharded (see EXPERIMENTS.md §Dry-run)
+            rules["seq"] = "model"
+    return rules
+
+
+def batch_shardings(mesh: Mesh, cfg: ModelConfig, batch_spec: dict, rules: dict):
+    def spec_for(name, leaf):
+        if name == "embeds":
+            logical = ("batch", "seq", "act_embed")
+        else:
+            logical = ("batch", "seq")
+        return NamedSharding(mesh, sharding.logical_pspec(logical, rules, mesh))
+
+    return {k: spec_for(k, v) for k, v in batch_spec.items()}
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def param_shardings(mesh: Mesh, cfg: ModelConfig, rules: dict):
+    return sharding.tree_shardings(mesh, model.param_specs(cfg), rules)
+
+
+def opt_shardings(mesh: Mesh, cfg: ModelConfig, rules: dict):
+    ps = param_shardings(mesh, cfg, rules)
+    return AdamState(step=replicated(mesh), mu=ps, nu=ps)
+
+
+def cache_shardings(
+    mesh: Mesh, cfg: ModelConfig, batch: int, max_len: int, long_ctx: bool, rules: dict
+):
+    return sharding.tree_shardings(
+        mesh, model.cache_specs(cfg, batch, max_len, long_ctx), rules
+    )

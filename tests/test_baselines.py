@@ -1,0 +1,88 @@
+"""Competitor baselines: TT-SVD, CP-ALS, Tucker, TR, SZ-lite."""
+import numpy as np
+
+from repro.core import cpd, szlite, tensor_ring, ttd, tucker
+
+RNG = np.random.default_rng(0)
+
+
+def test_ttsvd_exact_on_planted_rank():
+    g1 = RNG.normal(size=(1, 20, 4))
+    g2 = RNG.normal(size=(4, 18, 4))
+    g3 = RNG.normal(size=(4, 16, 1))
+    x = np.einsum("aib,bjc,ckd->ijk", g1, g2, g3)
+    t = ttd.tt_svd(x, max_rank=4)
+    assert t.fitness(x) > 0.9999
+
+
+def test_ttsvd_eps_guarantee():
+    x = RNG.normal(size=(20, 18, 16))
+    for eps in [0.3, 0.5, 0.8]:
+        t = ttd.tt_svd(x, eps=eps)
+        err = np.linalg.norm(x - t.to_dense()) / np.linalg.norm(x)
+        assert err <= eps + 1e-9, (eps, err)
+
+
+def test_ttsvd_rank_budget_monotone():
+    shape = (30, 30, 30)
+    p1 = ttd.tt_rank_for_budget(shape, 5000)
+    p2 = ttd.tt_rank_for_budget(shape, 20000)
+    assert p2 >= p1
+    assert ttd._tt_params(shape, p2) <= 20000
+
+
+def test_cp_als_recovers_planted():
+    a, b, c = RNG.normal(size=(20, 3)), RNG.normal(size=(18, 3)), RNG.normal(size=(16, 3))
+    x = np.einsum("ir,jr,kr->ijk", a, b, c)
+    d = cpd.cp_als(x, 3, iters=80)
+    assert d.fitness(x) > 0.999
+
+
+def test_cp_als_4order():
+    fs = [RNG.normal(size=(10, 2)) for _ in range(4)]
+    x = np.einsum("ir,jr,kr,lr->ijkl", *fs)
+    d = cpd.cp_als(x, 2, iters=80)
+    assert d.fitness(x) > 0.999
+
+
+def test_tucker_hooi_exact_on_planted():
+    core = RNG.normal(size=(3, 3, 3))
+    us = [np.linalg.qr(RNG.normal(size=(n, 3)))[0] for n in (20, 18, 16)]
+    x = np.einsum("abc,ia,jb,kc->ijk", core, *us)
+    t = tucker.tucker_hooi(x, [3, 3, 3])
+    assert t.fitness(x) > 0.9999
+
+
+def test_tucker_hooi_beats_or_matches_hosvd():
+    x = RNG.normal(size=(15, 14, 13))
+    hosvd = tucker.tucker_hooi(x, [4, 4, 4], iters=0)
+    hooi = tucker.tucker_hooi(x, [4, 4, 4], iters=8)
+    assert hooi.fitness(x) >= hosvd.fitness(x) - 1e-9
+
+
+def test_tensor_ring_reconstructs():
+    g1 = RNG.normal(size=(1, 12, 3))
+    g2 = RNG.normal(size=(3, 11, 3))
+    g3 = RNG.normal(size=(3, 10, 1))
+    x = np.einsum("aib,bjc,ckd->ijk", g1, g2, g3)  # TT is a special TR
+    t = tensor_ring.tr_svd(x, 4)
+    assert t.fitness(x) > 0.99
+
+
+def test_szlite_error_bound_and_ratio():
+    smooth = np.cumsum(RNG.normal(size=20000) * 0.01).reshape(100, 200)
+    for eb in [1e-2, 1e-3]:
+        c = szlite.compress(smooth, eb)
+        rec = szlite.decompress(c)
+        assert np.abs(rec - smooth).max() <= eb + 1e-12
+    c = szlite.compress(smooth, 1e-2)
+    assert smooth.size * 8 / c.payload_bytes() > 8  # smooth data compresses hard
+
+
+def test_budget_helpers():
+    shape = (40, 30, 20)
+    r = cpd.cp_rank_for_budget(shape, 5000)
+    assert (sum(shape) + 1) * r <= 5000
+    ranks = tucker.tucker_ranks_for_budget(shape, 8000)
+    n = int(np.prod(ranks)) + sum(a * b for a, b in zip(shape, ranks))
+    assert n <= 8000

@@ -1,0 +1,90 @@
+"""End-to-end TensorCodec behaviour (paper Alg. 1 + §V claims, scaled)."""
+import numpy as np
+import pytest
+
+from repro.core import codec
+
+
+def _smooth(shape=(24, 20, 16)):
+    g = np.meshgrid(*[np.linspace(0, 2, n) for n in shape], indexing="ij")
+    return (np.sin(3 * g[0] + g[1]) * np.cos(g[2]) + 0.3 * g[1]).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def smooth_run():
+    x = _smooth()
+    ct, log = codec.compress(
+        x,
+        codec.CodecConfig(
+            rank=6, hidden=12, epochs=120, batch_size=2048, lr=1e-2,
+            init_reorder=False, update_reorder=False, patience=15,
+        ),
+    )
+    return x, ct, log
+
+
+def test_fitness_on_smooth_tensor(smooth_run):
+    x, ct, log = smooth_run
+    assert ct.fitness(x) > 0.8
+
+
+def test_fitness_history_trends_up(smooth_run):
+    _, _, log = smooth_run
+    hist = log.fitness_history
+    assert hist[-1] > hist[0] + 0.2
+
+
+def test_compression_ratio(smooth_run):
+    # tiny test tensor, so the ratio is modest; real ratios are measured in
+    # benchmarks/fig3 on the Table-II-sized replicas
+    x, ct, _ = smooth_run
+    assert ct.payload_bytes(4) < x.size * 4 / 3  # >3x vs fp32 entries
+
+
+def test_decode_matches_to_dense(smooth_run):
+    x, ct, _ = smooth_run
+    rng = np.random.default_rng(0)
+    idx = np.stack([rng.integers(0, n, 50) for n in x.shape], axis=1)
+    dense = ct.to_dense()
+    np.testing.assert_allclose(
+        ct.decode(idx), dense[tuple(idx[:, j] for j in range(3))], rtol=1e-4, atol=1e-4
+    )
+
+
+def test_reordering_recovers_permuted_smooth():
+    """Full TensorCodec on a permuted smooth tensor beats the no-reorder
+    ablation (the paper's Fig. 4 ordering, scaled down)."""
+    rng = np.random.default_rng(0)
+    x = _smooth((20, 16, 12))
+    xp = x[rng.permutation(20)][:, rng.permutation(16)][:, :, rng.permutation(12)]
+    common = dict(rank=5, hidden=10, epochs=80, batch_size=2048, lr=1e-2, patience=12)
+    full, _ = codec.compress(xp, codec.CodecConfig(**common))
+    none, _ = codec.compress(
+        xp, codec.CodecConfig(init_reorder=False, update_reorder=False, **common)
+    )
+    assert full.fitness(xp) > none.fitness(xp) + 0.05
+
+
+def test_normalization_off_still_works():
+    x = _smooth((12, 10, 8)) * 50 + 200  # far from zero mean
+    ct, _ = codec.compress(
+        x,
+        codec.CodecConfig(
+            rank=4, hidden=8, epochs=60, batch_size=1024, normalize=True,
+            init_reorder=False, update_reorder=False,
+        ),
+    )
+    assert ct.fitness(x) > 0.5
+
+
+def test_payload_accounting_matches_theorem2():
+    x = _smooth((12, 10, 8))
+    ct, _ = codec.compress(
+        x, codec.CodecConfig(rank=4, hidden=8, epochs=2, init_reorder=False,
+                             update_reorder=False)
+    )
+    from repro.core import nttd
+
+    n_params = nttd.count_params(ct.params)
+    pi_bits = sum(n * int(np.ceil(np.log2(n))) for n in x.shape)
+    assert ct.payload_bits() == n_params * 64 + pi_bits + 2 * 64

@@ -1,0 +1,105 @@
+"""Per-kernel validation: Pallas (interpret=True) vs the ref.py oracles,
+swept over shapes and dtypes (the property-sweep substitute for hypothesis,
+which is unavailable offline)."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize(
+    "b,k,r,dtype",
+    [
+        (b, k, r, dt)
+        for b, k, r in [(32, 0, 4), (64, 5, 8), (100, 10, 16), (7, 3, 8), (256, 8, 32)]
+        for dt in [jnp.float32, jnp.bfloat16]
+    ],
+    ids=lambda v: str(v).split(".")[-1] if hasattr(v, "dtype") else str(v),
+)
+def test_tt_contract_sweep(b, k, r, dtype):
+    f = jnp.asarray(RNG.normal(size=(b, r)), dtype)
+    # keep the chain product O(1) so bf16 tolerances are meaningful
+    m = jnp.asarray(RNG.normal(size=(b, k, r, r)) * (0.5 / np.sqrt(r)), dtype)
+    l = jnp.asarray(RNG.normal(size=(b, r)), dtype)
+    want = ops.tt_contract(f, m, l, impl="ref")
+    got = ops.tt_contract(f, m, l, impl="pallas_interpret", tile_b=32)
+    tol = 1e-5 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize(
+    "b,t,h,dtype",
+    [
+        (b, t, h, dt)
+        for b, t, h in [(16, 6, 8), (50, 9, 16), (33, 12, 32), (8, 3, 64)]
+        for dt in [jnp.float32, jnp.bfloat16]
+    ],
+)
+def test_lstm_scan_sweep(b, t, h, dtype):
+    x = jnp.asarray(RNG.normal(size=(b, t, h)), dtype)
+    wi = jnp.asarray(RNG.normal(size=(h, 4 * h)) * 0.3, dtype)
+    wh = jnp.asarray(RNG.normal(size=(h, 4 * h)) * 0.3, dtype)
+    bb = jnp.asarray(RNG.normal(size=(4 * h,)) * 0.1, dtype)
+    want = ops.lstm_scan(x, wi, wh, bb, impl="ref")
+    got = ops.lstm_scan(x, wi, wh, bb, impl="pallas_interpret", tile_b=16)
+    tol = 2e-5 if dtype == jnp.float32 else 0.1
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize(
+    "b,s,hq,hkv,d",
+    [(1, 128, 4, 4, 64), (2, 256, 8, 2, 64), (2, 128, 4, 1, 128)],
+)
+def test_flash_attention_sweep(b, s, hq, hkv, d):
+    q = jnp.asarray(RNG.normal(size=(b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), jnp.float32)
+    want = ops.attention(q, k, v, impl="ref")
+    got = ops.attention(q, k, v, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_decode_offset():
+    """Decode shape: 1 query attending a longer KV with causal offset."""
+    b, skv, h, d = 2, 256, 4, 64
+    q = jnp.asarray(RNG.normal(size=(b, 128, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, skv, h, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, skv, h, d)), jnp.float32)
+    want = ops.attention(q, k, v, impl="ref", q_offset=128)
+    got = ops.attention(q, k, v, impl="pallas_interpret", q_offset=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_attention_matches_ref():
+    from repro.kernels import ref
+
+    b, s, h, d = 2, 4096, 2, 32
+    q = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+    want = ref.mha_attention(q, k, v)
+    got = ref.mha_attention_chunked(q, k, v, chunk=512)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_kv_len_masking():
+    from repro.kernels import ref
+
+    b, sq, skv, h, d = 3, 1, 64, 2, 16
+    q = jnp.asarray(RNG.normal(size=(b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, skv, h, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, skv, h, d)), jnp.float32)
+    kv_len = jnp.asarray([10, 32, 64], jnp.int32)
+    out = ref.mha_attention(q, k, v, causal=False, kv_len=kv_len)
+    # manual check for batch 0: only first 10 kv positions participate
+    out0 = ref.mha_attention(q[:1], k[:1, :10], v[:1, :10], causal=False)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(out0[0]), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,57 @@
+"""Serializer round-trip and bit-packing tests."""
+import numpy as np
+
+from repro.core import codec, serialization
+
+
+def test_pack_unpack_permutation_exact():
+    rng = np.random.default_rng(0)
+    for n in [1, 2, 3, 7, 8, 9, 63, 64, 65, 1000]:
+        perm = rng.permutation(n)
+        blob = serialization.pack_permutation(perm)
+        back = serialization.unpack_permutation(blob, n)
+        np.testing.assert_array_equal(perm, back)
+        if n > 1:
+            bits = max(int(np.ceil(np.log2(n))), 1)
+            assert len(blob) == (n * bits + 7) // 8  # paper's size convention
+
+
+def _tiny_ct():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(14, 11, 9)).astype(np.float32)
+    ct, _ = codec.compress(
+        x, codec.CodecConfig(rank=4, hidden=8, epochs=3, batch_size=512)
+    )
+    return x, ct
+
+
+def test_file_roundtrip_bit_exact_fp32():
+    x, ct = _tiny_ct()
+    blob = serialization.save_bytes(ct, np.float32)
+    ct2 = serialization.load_bytes(blob)
+    for a, b in zip(ct.pi, ct2.pi):
+        np.testing.assert_array_equal(a, b)
+    idx = np.stack([np.arange(5) % n for n in x.shape], axis=1)
+    np.testing.assert_allclose(ct.decode(idx), ct2.decode(idx), rtol=1e-6, atol=1e-6)
+    assert ct2.norm_mean == ct.norm_mean and ct2.norm_std == ct.norm_std
+
+
+def test_fp16_roundtrip_close():
+    x, ct = _tiny_ct()
+    blob16 = serialization.save_bytes(ct, np.float16)
+    blob32 = serialization.save_bytes(ct, np.float32)
+    assert len(blob16) < len(blob32)
+    ct2 = serialization.load_bytes(blob16)
+    idx = np.stack([np.arange(7) % n for n in x.shape], axis=1)
+    np.testing.assert_allclose(ct.decode(idx), ct2.decode(idx), rtol=0.05, atol=0.05)
+
+
+def test_file_io(tmp_path):
+    x, ct = _tiny_ct()
+    path = str(tmp_path / "t.tcdc")
+    n = serialization.save_file(path, ct)
+    import os
+
+    assert os.path.getsize(path) == n
+    ct2 = serialization.load_file(path)
+    np.testing.assert_allclose(ct.to_dense(), ct2.to_dense(), rtol=1e-6, atol=1e-6)
