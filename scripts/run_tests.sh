@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Reproduce CI (tier-1) locally:
+#
+#     scripts/run_tests.sh            # full tier-1 suite
+#     scripts/run_tests.sh -m 'not slow'   # skip the dry-run compile cells
+#
+# Phase 1 runs everything except the SPMD suite with the REAL single-device
+# CPU view (tests/conftest.py requires it for smoke tests and benches).
+# Phase 2 runs tests/test_spmd.py under a forced 8-device host platform —
+# its subprocess tests force their own device count either way, but the
+# explicit flag means a bare `pytest tests/test_spmd.py -k <case>` rerun of
+# a failure behaves the same as CI.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Custom selections run as a single pass-through invocation (the SPMD
+# subprocess tests force their own device count regardless), so paths
+# never run twice and keep the single-device main-process view.
+if [ "$#" -gt 0 ]; then
+    exec python -m pytest -x -q "$@"
+fi
+
+python -m pytest -x -q --ignore=tests/test_spmd.py
+
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m pytest -x -q tests/test_spmd.py

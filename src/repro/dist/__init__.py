@@ -1,0 +1,27 @@
+"""Distribution layer: logical-axis sharding, gradient compression,
+pipeline parallelism.
+
+Every weight and activation in the model zoo is annotated with *logical*
+axis names (``ParamSpec`` for weights, ``shard(x, *axes)`` for
+activations) rather than mesh axes.  A rules table (``BASE_RULES`` /
+``FSDP_RULES``, or a per-cell variant from ``train.step.effective_rules``)
+maps each logical axis to zero or more mesh axes; resolution happens late,
+against a concrete ``jax.sharding.Mesh``:
+
+* a logical axis whose mesh axes are absent from the mesh (e.g. 'pod' on
+  a single-pod mesh) silently falls back to replication,
+* a mesh axis already consumed by an earlier dimension of the same tensor
+  is skipped (first dimension wins),
+* a dimension whose size does not divide the mapped mesh-axis product is
+  replicated (smoke configs on big meshes just lose that sharding).
+
+This keeps one model definition valid on every mesh from a single CPU
+device (rules resolve to fully-replicated, ``shard`` is a no-op outside
+``sharding_ctx``) up to the multi-pod production mesh in ``launch.mesh``.
+
+Submodules:
+    sharding          ParamSpec, rules tables, tree materialize/abstract
+    grad_compress     error-feedback int8 / top-k gradient compressors
+    pipeline_parallel GPipe-style microbatched pipeline over a mesh axis
+"""
+from repro.dist import sharding  # noqa: F401  (the load-bearing module)

@@ -1,0 +1,83 @@
+"""GPipe-style pipeline parallelism over one mesh axis.
+
+The stack's layers are split into S = mesh.shape[axis] contiguous stages
+(``split_stages``); each device owns one stage's weights and the M
+microbatches stream through the ring (``pipeline_forward``).  The
+schedule is the classic GPipe fill-drain: M + S - 1 ticks, every tick
+each device applies its stage and ``ppermute``s the activation to the
+next stage.  Device i holds microbatch (t - i) at tick t, so the bubble
+fraction is (S - 1) / (M + S - 1).
+
+Devices do run their stage on ring-garbage during fill/drain ticks — the
+standard trick that keeps the loop body collective-uniform (every device
+executes the same ppermute each tick, which is what SPMD requires); the
+garbage lineages are never written to the output buffer.
+
+``fn(stage_params, x) -> y`` must preserve the activation shape (true
+for residual stacks), since the same buffer carries every stage's
+activation around the ring.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+
+def split_stages(params, n_stages: int):
+    """Split each leaf's leading (layer) dim into [n_stages, L/n_stages, ...]."""
+
+    def split(a):
+        if a.shape[0] % n_stages:
+            raise ValueError(
+                f"layer dim {a.shape[0]} not divisible by {n_stages} stages"
+            )
+        return a.reshape((n_stages, a.shape[0] // n_stages) + a.shape[1:])
+
+    return jax.tree.map(split, params)
+
+
+def pipeline_forward(fn, stage_params, microbatches, mesh: Mesh, axis: str = "pod"):
+    """Run ``fn`` as an S-stage pipeline over ``mesh.shape[axis]``.
+
+    stage_params: tree of [S, ...] leaves (see ``split_stages``), sharded
+    so device i holds stage i.  microbatches: [M, mb, ...].  Returns the
+    [M, mb, ...] outputs of the final stage, replicated over ``axis``.
+    """
+    n_stages = mesh.shape[axis]
+    m = microbatches.shape[0]
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def run(params, x):
+        params = jax.tree.map(lambda a: jnp.squeeze(a, 0), params)  # [1,...] local
+        stage = jax.lax.axis_index(axis)
+
+        def tick(t, carry):
+            state, out = carry
+            # stage 0 injects microbatch t (clamped past M: drain garbage,
+            # its lineage exits the loop before reaching the last stage)
+            inject = jax.lax.dynamic_index_in_dim(
+                x, jnp.minimum(t, m - 1), 0, keepdims=False
+            )
+            y = fn(params, jnp.where(stage == 0, inject, state))
+            done = t - (n_stages - 1)  # microbatch finishing this tick
+            write = jnp.logical_and(stage == n_stages - 1, done >= 0)
+            out = jnp.where(write, out.at[jnp.maximum(done, 0)].set(y), out)
+            return jax.lax.ppermute(y, axis, perm), out
+
+        carry = (jnp.zeros_like(x[0]), jnp.zeros_like(x))
+        _, out = jax.lax.fori_loop(0, m + n_stages - 1, tick, carry)
+        # only the last stage holds real outputs; psum replicates them
+        return jax.lax.psum(
+            jnp.where(stage == n_stages - 1, out, jnp.zeros_like(out)), axis
+        )
+
+    return shard_map(
+        run,
+        mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_rep=False,
+    )(stage_params, microbatches)

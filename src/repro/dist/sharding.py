@@ -1,0 +1,268 @@
+"""Logical-axis sharding: ParamSpec trees, rules tables, late mesh binding.
+
+Weights are declared once as ``ParamSpec(shape, logical_axes, init)``
+trees; activations are constrained in-model with ``shard(x, *axes)``.
+Nothing in the model code names a mesh axis — the rules tables below bind
+logical axes to mesh axes at jit/lower time, so the same model definition
+runs replicated on one CPU device or 3D-sharded on a multi-pod mesh.
+
+Resolution semantics (``logical_pspec``):
+  * rules map a logical axis to a mesh axis name, a tuple of names, or
+    ``None`` (replicate); axes missing from the table replicate too;
+  * mesh axes not present in the target mesh are dropped (e.g. 'pod' on a
+    single-pod mesh);
+  * a mesh axis consumed by an earlier dim of the same tensor is skipped
+    (PartitionSpecs must not repeat a mesh axis);
+  * when the tensor shape is known, a dim that the mapped axis product
+    does not divide evenly falls back to replication (smoke shapes on
+    production meshes).
+
+``shard`` only constrains inside a ``sharding_ctx`` — outside it is an
+identity, which is what keeps single-device tests oblivious to SPMD.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+import zlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# ParamSpec
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative leaf: shape + logical axis names + init kind.
+
+    init: 'fan_in' (scaled normal), 'embed', 'ones', 'zeros'.
+    dtype: overrides the tree-level default (KV caches, SSM states).
+    """
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "fan_in"
+    dtype: Any = None
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"ParamSpec rank mismatch: shape {self.shape} vs axes {self.axes}"
+            )
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+# ---------------------------------------------------------------------------
+# rules tables (logical axis -> mesh axis | tuple of mesh axes | None)
+# ---------------------------------------------------------------------------
+# Megatron-style tensor parallelism on 'model', data parallelism on
+# ('pod', 'data').  Weights stay unsharded on their input dims (pure TP);
+# FSDP_RULES below adds the ZeRO-3 weight sharding over the DP axes.
+BASE_RULES: dict[str, Any] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,          # -> 'model' (Megatron SP) via effective_rules
+    "seq_attn": None,     # -> 'model' for context-parallel attention cells
+    "act_embed": None,
+    # embedding / unembedding
+    "vocab": "model",
+    "embed": None,
+    # stacked-layer and generic weight dims
+    "layers": None,
+    "ffn_in": None,
+    "mlp": "model",
+    # attention
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    # KV cache; kv_seq flips to 'data'/'model' per-cell (flash-decode)
+    "kv_seq": None,
+    "long_kv": "data",
+    # MoE: dispatch groups ride the DP axes (keeps the sort/scatter local),
+    # expert weights are TP-sharded on their hidden dim like dense MLPs
+    "moe_group": ("pod", "data"),
+    "experts": None,
+    "expert_in": None,
+    "expert_mlp": "model",
+    "capacity": None,
+    # Mamba / SSD
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "ssm_head_dim": None,
+    "ssm_state": None,
+    "conv_k": None,
+}
+
+# ZeRO-3/FSDP: additionally shard every weight's input dim over the DP
+# axes (gathered bf16 per use; see train.step loss_with_cast).  Experts
+# move to 'model' (expert parallelism); 'expert_mlp' then loses 'model'
+# via the first-dim-wins fallback, so expert weights gather only over
+# 'data' on their d_model dim.
+FSDP_RULES: dict[str, Any] = dict(
+    BASE_RULES,
+    ffn_in=("pod", "data"),
+    embed=("pod", "data"),
+    experts="model",
+    expert_in=("pod", "data"),
+)
+
+
+# ---------------------------------------------------------------------------
+# rule resolution
+# ---------------------------------------------------------------------------
+def _rule_axes(logical: str | None, rules: dict) -> tuple[str, ...]:
+    if logical is None:
+        return ()
+    r = rules.get(logical)
+    if r is None:
+        return ()
+    if isinstance(r, str):
+        return (r,)
+    return tuple(r)
+
+
+def logical_pspec(
+    axes: tuple[str | None, ...],
+    rules: dict,
+    mesh: Mesh,
+    shape: tuple[int, ...] | None = None,
+) -> P:
+    """Resolve logical axis names to a PartitionSpec on ``mesh``.
+
+    With ``shape`` given, dims the mapped mesh-axis product does not
+    divide evenly are replicated instead (all-or-nothing per dim).
+    """
+    used: set[str] = set()
+    parts: list[Any] = []
+    for i, logical in enumerate(axes):
+        cand = [
+            m
+            for m in _rule_axes(logical, rules)
+            if m in mesh.axis_names and m not in used
+        ]
+        if cand and shape is not None:
+            if shape[i] % math.prod(mesh.shape[m] for m in cand) != 0:
+                cand = []
+        used.update(cand)
+        if not cand:
+            parts.append(None)
+        elif len(cand) == 1:
+            parts.append(cand[0])
+        else:
+            parts.append(tuple(cand))
+    return P(*parts)
+
+
+# ---------------------------------------------------------------------------
+# sharding context + activation constraints
+# ---------------------------------------------------------------------------
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, rules: dict):
+    """Bind (mesh, rules) for ``shard`` constraints traced inside."""
+    prev = getattr(_CTX, "val", None)
+    _CTX.val = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _CTX.val = prev
+
+
+def current_ctx() -> tuple[Mesh, dict] | None:
+    return getattr(_CTX, "val", None)
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain ``x`` to its logical axes under the active sharding_ctx.
+
+    Identity when no context is active (single-device tests, benches).
+    """
+    if x.ndim != len(axes):
+        # validate even on the no-context identity path, so single-device
+        # tests catch a bad annotation before it first lowers under a mesh
+        raise ValueError(f"shard: rank {x.ndim} tensor with axes {axes}")
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_pspec(axes, rules, mesh, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# spec-tree operations
+# ---------------------------------------------------------------------------
+def tree_shardings(mesh: Mesh, specs, rules: dict):
+    """ParamSpec tree -> NamedSharding tree (divisibility-checked)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, logical_pspec(s.axes, rules, mesh, s.shape)),
+        specs,
+        is_leaf=_is_spec,
+    )
+
+
+def tree_abstract(specs, dtype):
+    """ParamSpec tree -> ShapeDtypeStruct tree (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or dtype),
+        specs,
+        is_leaf=_is_spec,
+    )
+
+
+def _stacked_fan_in(spec: ParamSpec) -> int:
+    # fan-in = every non-output dim that is not a stacked-layer or a
+    # vmapped expert dim; the last dim is the output by convention
+    # (matches 2D weights exactly; depthwise convs get fan_in = k).
+    # q/k/v projections fuse two output dims (heads, head_dim): a heads
+    # dim right before a final head_dim is output, not fan-in — while in
+    # wo-style (heads, head_dim, d) weights the heads dim IS fan-in.
+    fan = 1
+    n = len(spec.axes)
+    for i, (dim, ax) in enumerate(zip(spec.shape[:-1], spec.axes[:-1])):
+        if ax in ("layers", "experts"):
+            continue
+        if ax in ("heads", "kv_heads") and i == n - 2 and spec.axes[-1] == "head_dim":
+            continue
+        fan *= dim
+    return fan
+
+
+def _init_leaf(key: jax.Array, spec: ParamSpec, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        # unit-variance logits under tied unembedding (x is rmsnormed)
+        std = spec.shape[-1] ** -0.5
+    elif spec.init == "fan_in":
+        std = _stacked_fan_in(spec) ** -0.5
+    else:
+        raise ValueError(f"unknown init kind: {spec.init!r}")
+    return (jax.random.normal(key, spec.shape) * std).astype(dtype)
+
+
+def materialize(key: jax.Array, specs, dtype):
+    """ParamSpec tree -> real weights.  Per-leaf keys are derived from the
+    tree path, so adding a parameter never reshuffles the others."""
+
+    def init_at(path, spec):
+        leaf_key = jax.random.fold_in(
+            key, zlib.crc32(jax.tree_util.keystr(path).encode())
+        )
+        return _init_leaf(leaf_key, spec, spec.dtype or dtype)
+
+    return jax.tree_util.tree_map_with_path(init_at, specs, is_leaf=_is_spec)

@@ -96,6 +96,14 @@ def collective_bytes_per_device(hlo_text: str, by_dtype: bool = False) -> dict[s
     return out
 
 
+def cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict on new jax, [dict] on old."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def model_flops(cfg, shape) -> float:
     """Analytic useful FLOPs (6ND train, 2ND inference) on ACTIVE params."""
     n_active = model.param_count(cfg, active_only=True)
@@ -234,7 +242,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, rules_name: str = "base
             arch, shape_name, mesh, rules_name, remat, seq_shard, depth_blocks=depth
         )
         comp = low.compile()
-        cost = comp.cost_analysis()
+        cost = cost_dict(comp)
         coll = collective_bytes_per_device(comp.as_text())
         return (
             float(cost.get("flops", 0.0)),

@@ -66,7 +66,7 @@ def run(mesh_name: str, impl: str, batch: int, steps: int, rank: int,
     ).lower(ab_params, ab_opt, pos, vals)
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = dryrun.cost_dict(compiled)
     coll = dryrun.collective_bytes_per_device(compiled.as_text())
 
     # cost_analysis under-counts the steps-loop (while); per-step numbers

@@ -4,3 +4,13 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    # mirror pyproject [tool.pytest.ini_options] so the marker stays
+    # registered even when pytest is pointed somewhere without the rootdir
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running end-to-end cells (multi-pod dry-run compiles); "
+        "run in tier-1, deselect with -m 'not slow'",
+    )

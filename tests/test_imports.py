@@ -1,0 +1,58 @@
+"""Every module under src/repro must import cleanly.
+
+Guards against missing-submodule seed bugs (the repro.dist hole) landing
+silently: a module that only a launcher or benchmark imports would
+otherwise break nothing until someone runs it.  The walk happens in a
+subprocess because launch.dryrun / launch.dryrun_codec set XLA device
+flags at import time and the main test process must keep the real
+single-device CPU view (see conftest.py).
+"""
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+WALK_AND_IMPORT = """
+import importlib
+import os
+import sys
+
+root = sys.argv[1]
+mods = []
+for dirpath, dirnames, filenames in os.walk(os.path.join(root, "repro")):
+    dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+    for f in sorted(filenames):
+        if not f.endswith(".py"):
+            continue
+        rel = os.path.relpath(os.path.join(dirpath, f), root)
+        mod = rel[:-3].replace(os.sep, ".")
+        if mod.endswith(".__init__"):
+            mod = mod[: -len(".__init__")]
+        mods.append(mod)
+
+failures = []
+for mod in sorted(mods):
+    try:
+        importlib.import_module(mod)
+    except Exception as e:  # noqa: BLE001 — report every broken module
+        failures.append(f"{mod}: {type(e).__name__}: {e}")
+
+assert not failures, "unimportable modules:\\n" + "\\n".join(failures)
+# the subsystem this repo once shipped without
+for expected in ("repro.dist.sharding", "repro.dist.grad_compress",
+                 "repro.dist.pipeline_parallel"):
+    assert expected in mods, f"missing module: {expected}"
+print(f"imported {len(mods)} modules")
+"""
+
+
+def test_all_repro_modules_import():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", WALK_AND_IMPORT, SRC],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "imported" in out.stdout
