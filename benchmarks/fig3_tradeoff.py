@@ -1,60 +1,58 @@
-"""Fig. 3: compressed size vs fitness trade-off, TensorCodec vs the
-decomposition competitors at matched parameter budgets.
+"""Fig. 3: compressed size vs fitness trade-off, TensorCodec vs every other
+registered codec at matched payload budgets.
 
 Datasets are the synthetic Table-II replicas (mini shapes; the container is
 offline — see DESIGN.md §9).  Competitors get the SAME payload budget the
-codec used (paper protocol: sizes matched, fitness compared).
+codec used (paper protocol: sizes matched, fitness compared) — each rival
+comes from ``repro.codecs.available()``, so adding a codec to the registry
+adds a column here with no wiring.
 """
 from __future__ import annotations
 
-import numpy as np
+import time
 
-from benchmarks.common import FULL, emit, save_rows, timeit
-from repro.core import codec, cpd, tensor_ring, ttd, tucker
+from benchmarks.common import FULL, emit, save_rows
+from repro.codecs import available, get_codec
 from repro.data import synthetic_tensors as st
 
 DATASETS = ["uber", "air_quality", "stock", "nyc"] if not FULL else list(st.DATASETS)
 
 
 def run() -> None:
+    rivals = [n for n in available() if n != "nttd"]
     rows = []
     for name in DATASETS:
         x = st.load(name, mini=True)
         epochs = 60 if not FULL else 200
-        cfg = codec.CodecConfig(
-            rank=6, hidden=12, epochs=epochs, batch_size=8192, lr=1e-2,
+        t0 = time.time()
+        enc = get_codec("nttd").fit(
+            x, rank=6, hidden=12, epochs=epochs, batch_size=8192, lr=1e-2,
             reorder_samples=1024, patience=8,
         )
-        t = timeit(lambda: None)  # placeholder so emit shape is uniform
-        t0 = __import__("time").time()
-        ct, log = codec.compress(x, cfg)
-        t = __import__("time").time() - t0
-        fit_tc = ct.fitness(x)
-        budget_bytes = ct.payload_bytes()           # paper: fp64 convention
-        budget_params = budget_bytes // 8
+        t = time.time() - t0
+        budget_bytes = enc.payload_bytes()          # paper: fp64 convention
+        fits = {"nttd": enc.fitness(x)}
+        for rival in rivals:
+            try:
+                fits[rival] = get_codec(rival).fit(x, budget_bytes).fitness(x)
+            except ValueError:  # codec cannot meet this budget (e.g. szlite floor)
+                fits[rival] = float("nan")
 
-        r_tt = ttd.tt_rank_for_budget(x.shape, budget_params)
-        fit_tt = ttd.tt_svd(x, max_rank=max(r_tt, 1)).fitness(x)
-        r_cp = cpd.cp_rank_for_budget(x.shape, budget_params)
-        fit_cp = cpd.cp_als(x, r_cp, iters=25).fitness(x)
-        rk_tk = tucker.tucker_ranks_for_budget(x.shape, budget_params)
-        fit_tk = tucker.tucker_hooi(x, rk_tk, iters=4).fitness(x)
-        r_tr = tensor_ring.tr_rank_for_budget(x.shape, budget_params)
-        tr = tensor_ring.tr_svd(x, max(r_tr, 2))
-        fit_tr = tr.fitness(x)
-
-        best_comp = max(fit_tt, fit_cp, fit_tk, fit_tr)
-        rows.append([name, x.size, budget_bytes, round(fit_tc, 4), round(fit_tt, 4),
-                     round(fit_cp, 4), round(fit_tk, 4), round(fit_tr, 4)])
+        best_rival = max(
+            (fits[r] for r in rivals if fits[r] == fits[r]), default=float("-inf")
+        )
+        rows.append([name, x.size, budget_bytes]
+                    + [round(fits[c], 4) for c in ["nttd"] + rivals])
+        derived = ";".join(f"{c}={fits[c]:.4f}" for c in ["nttd"] + rivals)
         emit(
             f"fig3_{name}",
             t * 1e6,
-            f"bytes={budget_bytes};tc={fit_tc:.4f};tt={fit_tt:.4f};cp={fit_cp:.4f};"
-            f"tk={fit_tk:.4f};tr={fit_tr:.4f};tc_minus_best={fit_tc-best_comp:+.4f}",
+            f"bytes={budget_bytes};{derived};"
+            f"tc_minus_best={fits['nttd'] - best_rival:+.4f}",
         )
     save_rows(
         "fig3_tradeoff.csv",
-        ["dataset", "entries", "budget_bytes", "tensorcodec", "ttd", "cpd", "tucker", "tr"],
+        ["dataset", "entries", "budget_bytes", "nttd"] + rivals,
         rows,
     )
 

@@ -10,7 +10,8 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, save_rows
-from repro.core import codec, reorder
+from repro.codecs import get_codec
+from repro.core import reorder
 
 
 def run() -> None:
@@ -26,13 +27,11 @@ def run() -> None:
     xp = x[perm]
 
     t0 = time.time()
-    ct, _ = codec.compress(
-        xp,
-        codec.CodecConfig(rank=6, hidden=12, epochs=60, batch_size=4096,
-                          lr=1e-2, patience=10),
+    enc = get_codec("nttd").fit(
+        xp, rank=6, hidden=12, epochs=60, batch_size=4096, lr=1e-2, patience=10,
     )
     dt = time.time() - t0
-    learned = ct.pi[0]
+    learned = enc.pi[0]
 
     def adjacency_score(order):
         # positions in latent space along the learned order

@@ -1,4 +1,6 @@
-"""Quickstart: compress a tensor with TensorCodec, compare with TT-SVD.
+"""Quickstart: compress a tensor with TensorCodec via the unified codec
+API, compare against every other registered codec at the same budget, and
+serve entry queries from the serialized payload.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,8 +10,9 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import codec, serialization, ttd
+from repro.codecs import available, get_codec, load_bytes, save_bytes
 from repro.data import synthetic_tensors as st
+from repro.serve.codec_service import CodecService
 
 
 def main():
@@ -17,27 +20,41 @@ def main():
     x = st.load("stock", mini=True)
     print(f"input tensor {x.shape} = {x.size} entries ({x.size * 8 / 1e6:.1f} MB fp64)")
 
-    ct, log = codec.compress(
-        x,
-        codec.CodecConfig(rank=6, hidden=12, epochs=60, batch_size=8192,
-                          lr=1e-2, patience=8, verbose=False),
+    enc = get_codec("nttd").fit(
+        x, rank=6, hidden=12, epochs=60, batch_size=8192, lr=1e-2, patience=8,
     )
-    fit = ct.fitness(x)
-    payload = ct.payload_bytes()
+    fit = enc.fitness(x)
+    payload = enc.payload_bytes()
     print(f"TensorCodec: fitness={fit:.4f} payload={payload/1e3:.1f} KB "
-          f"({x.size * 8 / payload:.0f}x compression) in {log.seconds_train:.0f}s")
+          f"({x.size * 8 / payload:.0f}x compression) in "
+          f"{enc.log.seconds_train:.0f}s")
 
-    # TT-SVD at the same byte budget (paper's matched-size protocol)
-    r = ttd.tt_rank_for_budget(x.shape, payload // 8)
-    t = ttd.tt_svd(x, max_rank=max(r, 1))
-    print(f"TT-SVD same budget: fitness={t.fitness(x):.4f} (rank {max(r,1)})")
+    # every other registered codec at the same byte budget (paper protocol)
+    for name in available():
+        if name == "nttd":
+            continue
+        try:
+            rival = get_codec(name).fit(x, payload)
+        except ValueError as e:  # codec cannot meet this budget
+            print(f"{name} same budget: skipped ({e})")
+            continue
+        print(f"{name} same budget: fitness={rival.fitness(x):.4f} "
+              f"payload={rival.payload_bytes()/1e3:.1f} KB")
 
-    # real serialization round trip
-    blob = serialization.save_bytes(ct, np.float32)
-    ct2 = serialization.load_bytes(blob)
+    # container round trip + served entry queries
+    blob = save_bytes(enc)
+    enc2 = load_bytes(blob)
     idx = np.array([[0, 0, 0], [3, 5, 7]])
     print(f"serialized {len(blob)/1e3:.1f} KB; decode after round-trip: "
-          f"{ct2.decode(idx).round(3)} vs original {x[0,0,0]:.3f}, {x[3,5,7]:.3f}")
+          f"{enc2.decode_at(idx).round(3)} vs original {x[0,0,0]:.3f}, {x[3,5,7]:.3f}")
+
+    svc = CodecService()
+    svc.load("stock", blob)
+    t0 = svc.submit("stock", idx)
+    t1 = svc.submit("stock", idx[::-1])
+    out = svc.flush()
+    print(f"codec service ({svc.info('stock').codec}): coalesced 2 requests -> "
+          f"{out[t0].round(3)}, {out[t1].round(3)}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,21 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Fast registry smoke: a broken codec adapter fails here, before pytest
+# collection ever starts.
+python - <<'PY'
+from repro.codecs import available, get_codec
+
+expected = {"cpd", "nttd", "szlite", "tensor_ring", "ttd", "tucker"}
+names = set(available())
+missing = expected - names
+assert not missing, f"codec registry missing {sorted(missing)} (have {sorted(names)})"
+for name in sorted(names):
+    codec = get_codec(name)
+    assert codec.encoded_cls.codec_name == name, name
+print(f"codec registry OK: {', '.join(sorted(names))}")
+PY
+
 # Custom selections run as a single pass-through invocation (the SPMD
 # subprocess tests force their own device count regardless), so paths
 # never run twice and keep the single-device main-process view.

@@ -1,0 +1,30 @@
+"""Unified codec API: one protocol, registry, and container for all six
+compressors (paper §V's comparison set behind a single interface).
+
+    from repro.codecs import available, get_codec, load_bytes
+
+    enc = get_codec("nttd").fit(x, rank=8, hidden=16, epochs=30)
+    for name in available():          # budget-matched competitors
+        rival = get_codec(name).fit(x, enc.payload_bytes())
+
+    blob = enc.save()                 # versioned self-describing container
+    load_bytes(blob).decode_at(idx)   # codec-id header dispatches decoding
+
+Modules: ``base`` (protocol + registry), ``adapters`` (the six wrappers,
+imported here so they self-register), ``container`` (on-disk format).
+"""
+from repro.codecs.base import Codec, Encoded, available, get_codec, register
+from repro.codecs import adapters  # noqa: F401  (self-registers the codecs)
+from repro.codecs.container import load_bytes, load_file, save_bytes, save_file
+
+__all__ = [
+    "Codec",
+    "Encoded",
+    "available",
+    "get_codec",
+    "register",
+    "load_bytes",
+    "load_file",
+    "save_bytes",
+    "save_file",
+]

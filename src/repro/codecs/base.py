@@ -1,0 +1,131 @@
+"""The `Codec` protocol and string-keyed registry.
+
+Every compressor in the repo — the paper's NTTD-based TensorCodec and the
+five §V competitors (TT, Tucker, CP, TR, SZ-lite) — is exposed behind one
+interface so benchmarks, checkpoint compression, and the serve layer can
+treat them as interchangeable fit/query backends:
+
+    from repro.codecs import get_codec, available
+
+    enc = get_codec("nttd").fit(x, budget_bytes)   # or codec-specific opts
+    enc.fitness(x)                 # 1 - ||x - x_hat|| / ||x||
+    enc.decode_at(indices)         # entries at ORIGINAL indices, [B, d] -> [B]
+    enc.to_dense()                 # full reconstruction
+    enc.payload_bytes()            # paper §V-A accounting (one convention)
+    blob = enc.save()              # self-describing container (container.py)
+
+`budget` is a payload budget in BYTES under the shared accounting
+convention (`Codec.bytes_per_param` = 8, the paper's fp64 convention);
+each adapter translates it into its native knob (TT/TR/CP rank, Tucker
+rank vector, SZ error bound, NTTD rank/hidden).  Codec-specific keyword
+options bypass the budget translation when given explicitly.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, ClassVar
+
+import numpy as np
+
+
+class Encoded(abc.ABC):
+    """A fitted compressed payload: query, account, and serialize.
+
+    ``codec_name`` is stamped by ``@register`` and is the id written into
+    the container header, so a payload loaded from disk knows which codec
+    decodes it.
+    """
+
+    codec_name: ClassVar[str] = "?"
+
+    @property
+    @abc.abstractmethod
+    def shape(self) -> tuple[int, ...]:
+        """Shape of the original tensor this payload encodes — the index
+        space ``decode_at`` addresses."""
+
+    # -- querying ------------------------------------------------------------
+    @abc.abstractmethod
+    def decode_at(self, indices: np.ndarray) -> np.ndarray:
+        """Approximate entries at ORIGINAL indices: [B, d] int -> [B]."""
+
+    @abc.abstractmethod
+    def to_dense(self) -> np.ndarray:
+        """Full reconstruction in original index order."""
+
+    def fitness(self, x: np.ndarray) -> float:
+        """Paper Eq. 1: 1 - ||x - x_hat||_F / ||x||_F on the raw tensor."""
+        x64 = np.asarray(x, dtype=np.float64)
+        err = float(np.linalg.norm(x64 - np.asarray(self.to_dense(), np.float64)))
+        return 1.0 - err / max(float(np.linalg.norm(x64)), 1e-30)
+
+    # -- accounting ----------------------------------------------------------
+    @abc.abstractmethod
+    def payload_bytes(self) -> int:
+        """Compressed size under the shared §V-A accounting convention."""
+
+    # -- serialization (container body; header added by container.py) --------
+    @abc.abstractmethod
+    def to_bytes(self) -> bytes:
+        """Codec-specific body bytes.  Bit-exact round-trip contract:
+        ``from_bytes(to_bytes())`` decodes identically."""
+
+    @classmethod
+    @abc.abstractmethod
+    def from_bytes(cls, data: bytes) -> "Encoded":
+        """Inverse of ``to_bytes``."""
+
+    def save(self) -> bytes:
+        """Full self-describing container (header + body)."""
+        from repro.codecs import container
+
+        return container.save_bytes(self)
+
+
+class Codec(abc.ABC):
+    """A fit backend producing :class:`Encoded` payloads."""
+
+    name: ClassVar[str] = "?"
+    encoded_cls: ClassVar[type[Encoded]]
+    #: the paper's §V-A size convention: every parameter is accounted as
+    #: fp64 regardless of the dtype it is *stored* at.  All registered
+    #: codecs share this value so budget-matched comparisons are fair;
+    #: tests assert the conventions agree.
+    bytes_per_param: ClassVar[int] = 8
+
+    @abc.abstractmethod
+    def fit(self, x: np.ndarray, budget: int | None = None, **opts: Any) -> Encoded:
+        """Compress ``x`` to at most ``budget`` payload bytes (accounting
+        convention), or per ``opts`` when codec-native knobs are given."""
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+_REGISTRY: dict[str, Codec] = {}
+
+
+def register(name: str):
+    """Class decorator: instantiate the codec and register it under ``name``."""
+
+    def deco(cls: type[Codec]) -> type[Codec]:
+        cls.name = name
+        cls.encoded_cls.codec_name = name
+        _REGISTRY[name] = cls()
+        return cls
+
+    return deco
+
+
+def get_codec(name: str) -> Codec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown codec {name!r}; available: {', '.join(available())}"
+        ) from None
+
+
+def available() -> list[str]:
+    """Sorted names of all registered codecs."""
+    return sorted(_REGISTRY)

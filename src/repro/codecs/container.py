@@ -1,0 +1,153 @@
+"""Versioned self-describing container for ANY registered codec.
+
+Extends the original NTTD-only TCDC layout (core/serialization.py, v2)
+with a codec-id header, so every codec round-trips to disk bit-exactly:
+
+    magic 'TCDC' | u16 version=3 | u8 flags | u8 name_len | name ascii
+    u64 body_len | u32 crc32(body) | body
+
+The body is the codec's own ``Encoded.to_bytes()`` payload; for NTTD it
+is exactly the legacy v2 blob, and ``load_bytes`` still accepts bare v2
+blobs (headerless NTTD payloads written by older checkpoints).
+
+Array (de)serialization helpers are shared by the adapter bodies:
+``write_array``/``read_array`` preserve dtype and shape so float64
+baselines round-trip bit-exactly.
+"""
+from __future__ import annotations
+
+import io
+import struct
+import zlib
+
+import numpy as np
+
+from repro.codecs.base import Encoded, get_codec
+
+MAGIC = b"TCDC"
+VERSION = 3
+_LEGACY_NTTD_VERSION = 2
+
+_DTYPES = {
+    0: np.float16,
+    1: np.float32,
+    2: np.float64,
+    3: np.int32,
+    4: np.int64,
+    5: np.uint8,
+}
+_DTYPE_CODES = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+
+# ---------------------------------------------------------------------------
+# array helpers (used by adapter to_bytes/from_bytes bodies)
+# ---------------------------------------------------------------------------
+def write_array(out: io.BytesIO, arr: np.ndarray) -> None:
+    """u8 dtype-code | u8 ndim | ndim x u64 shape | raw bytes (C order)."""
+    arr = np.ascontiguousarray(arr)
+    out.write(struct.pack("<BB", _DTYPE_CODES[arr.dtype], arr.ndim))
+    out.write(np.asarray(arr.shape, dtype=np.uint64).tobytes())
+    out.write(arr.tobytes())
+
+
+def pack_arrays(*arrays: np.ndarray) -> bytes:
+    """u8 count | count x array — the shared body framing for the
+    decomposition codecs (TT/Tucker/CP/TR cores and factors)."""
+    if len(arrays) > 255:
+        raise ValueError("too many arrays for u8 count")
+    out = io.BytesIO()
+    out.write(struct.pack("<B", len(arrays)))
+    for arr in arrays:
+        write_array(out, arr)
+    return out.getvalue()
+
+
+def unpack_arrays(data: bytes) -> list[np.ndarray]:
+    buf = io.BytesIO(data)
+    head = buf.read(1)
+    if not head:
+        raise ValueError("truncated payload: array count")
+    (n,) = struct.unpack("<B", head)
+    return [read_array(buf) for _ in range(n)]
+
+
+def read_array(buf: io.BytesIO) -> np.ndarray:
+    head = buf.read(2)
+    if len(head) < 2:
+        raise ValueError("truncated payload: array header")
+    code, ndim = struct.unpack("<BB", head)
+    if code not in _DTYPES:
+        raise ValueError(f"corrupt payload: unknown dtype code {code}")
+    shape = tuple(np.frombuffer(buf.read(8 * ndim), dtype=np.uint64).astype(int))
+    dtype = np.dtype(_DTYPES[code])
+    nbytes = int(np.prod(shape)) * dtype.itemsize if ndim else dtype.itemsize
+    raw = buf.read(nbytes)
+    if len(raw) < nbytes:
+        raise ValueError("truncated payload: array body")
+    return np.frombuffer(raw, dtype=dtype).reshape(shape).copy()
+
+
+# ---------------------------------------------------------------------------
+# container
+# ---------------------------------------------------------------------------
+def save_bytes(enc: Encoded) -> bytes:
+    name = enc.codec_name.encode("ascii")
+    if not name or len(name) > 255:
+        raise ValueError(f"bad codec id {enc.codec_name!r}")
+    body = enc.to_bytes()
+    out = io.BytesIO()
+    out.write(MAGIC)
+    out.write(struct.pack("<HBB", VERSION, 0, len(name)))
+    out.write(name)
+    out.write(struct.pack("<QI", len(body), zlib.crc32(body) & 0xFFFFFFFF))
+    out.write(body)
+    return out.getvalue()
+
+
+def load_bytes(data: bytes) -> Encoded:
+    if len(data) < 4 or data[:4] != MAGIC:
+        raise ValueError("not a TensorCodec container")
+    if len(data) < 6:
+        raise ValueError("truncated payload: version header")
+    (version,) = struct.unpack("<H", data[4:6])
+    if version == _LEGACY_NTTD_VERSION:
+        # headerless NTTD blob from core/serialization.py (older checkpoints)
+        from repro.codecs.adapters import NTTDEncoded
+
+        return NTTDEncoded.from_bytes(data)
+    if version != VERSION:
+        raise ValueError(f"unsupported container version {version}")
+    if len(data) < 8:
+        raise ValueError("truncated payload: header")
+    _flags, name_len = struct.unpack("<BB", data[6:8])
+    off = 8
+    if len(data) < off + name_len + 12:
+        raise ValueError("truncated payload: codec id")
+    name = data[off : off + name_len].decode("ascii")
+    off += name_len
+    body_len, crc = struct.unpack("<QI", data[off : off + 12])
+    off += 12
+    body = data[off : off + body_len]
+    if len(body) < body_len:
+        raise ValueError(
+            f"truncated payload: body has {len(body)} of {body_len} bytes"
+        )
+    if zlib.crc32(body) & 0xFFFFFFFF != crc:
+        raise ValueError("corrupt payload: body checksum mismatch")
+    try:
+        codec = get_codec(name)
+    except KeyError:
+        raise ValueError(f"unknown codec id {name!r} in container") from None
+    return codec.encoded_cls.from_bytes(body)
+
+
+def save_file(path: str, enc: Encoded) -> int:
+    data = save_bytes(enc)
+    with open(path, "wb") as f:
+        f.write(data)
+    return len(data)
+
+
+def load_file(path: str) -> Encoded:
+    with open(path, "rb") as f:
+        return load_bytes(f.read())

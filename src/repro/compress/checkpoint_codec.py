@@ -1,10 +1,15 @@
-"""TensorCodec as a checkpoint codec (the paper <-> framework integration).
+"""Compressed checkpoints over the unified codec registry.
 
-Large weight tensors are lossily compressed with NTTD before hitting disk
-or the network: embedding tables, MoE expert banks, and any matrix above
-``min_elements``.  Each compressed leaf is fitness-gated — if the quick
-NTTD fit cannot reach ``min_fitness`` within the epoch budget, the leaf is
-stored raw instead (no silent quality cliffs).
+Large weight tensors are lossily compressed before hitting disk or the
+network: embedding tables, MoE expert banks, and any matrix above
+``min_elements``.  Any codec registered in ``repro.codecs`` can back the
+compression (``CodecCheckpointConfig.codec``); the default is the paper's
+NTTD.  Each compressed leaf is fitness-gated — if the fit cannot reach
+``min_fitness`` within its budget, the leaf is stored raw instead (no
+silent quality cliffs).  Payloads are the self-describing container
+format, so a checkpoint written with one codec restores through the
+registry without the reader knowing which codec produced it (legacy
+headerless NTTD blobs from older checkpoints still load).
 
 This is the deployment story for the paper's technique at 1000-node
 scale: checkpoint shipping and cold-start restore are bandwidth-bound, and
@@ -18,17 +23,17 @@ import dataclasses
 import io
 from typing import Any
 
-import jax
 import numpy as np
 
-from repro.core import codec as codec_lib
-from repro.core import serialization
+from repro import codecs
 
 
 @dataclasses.dataclass
 class CodecCheckpointConfig:
+    codec: str = "nttd"              # any name in repro.codecs.available()
     min_elements: int = 1 << 16      # only compress leaves at least this big
     min_fitness: float = 0.95        # fitness gate; below -> store raw
+    # NTTD fit knobs (ignored by budget-driven codecs)
     rank: int = 8
     hidden: int = 16
     epochs: int = 15
@@ -36,6 +41,30 @@ class CodecCheckpointConfig:
     lr: float = 1e-2
     reorder: bool = False            # reordering off for speed by default
     seed: int = 0
+    # budget for non-NTTD codecs: target payload as a fraction of raw bytes
+    budget_ratio: float = 0.125
+    fit_opts: dict[str, Any] | None = None  # explicit overrides, passed to fit
+
+
+def _fit_leaf(arr32: np.ndarray, cfg: CodecCheckpointConfig) -> codecs.Encoded:
+    codec = codecs.get_codec(cfg.codec)
+    if cfg.fit_opts is not None:
+        return codec.fit(arr32, **cfg.fit_opts)
+    if cfg.codec == "nttd":
+        return codec.fit(
+            arr32,
+            rank=cfg.rank,
+            hidden=cfg.hidden,
+            epochs=cfg.epochs,
+            batch_size=cfg.batch_size,
+            lr=cfg.lr,
+            init_reorder=cfg.reorder,
+            update_reorder=cfg.reorder,
+            seed=cfg.seed,
+            entries_per_epoch=min(arr32.size, 2_000_000),
+        )
+    budget = max(int(arr32.nbytes * cfg.budget_ratio), 1024)
+    return codec.fit(arr32, budget)
 
 
 def compress_tree(tree, cfg: CodecCheckpointConfig | None = None):
@@ -51,25 +80,16 @@ def compress_tree(tree, cfg: CodecCheckpointConfig | None = None):
         raw_nbytes = arr.nbytes
         stats["raw_bytes"] += raw_nbytes
         if arr.size >= cfg.min_elements and arr.ndim >= 2:
-            ct, _log = codec_lib.compress(
-                arr.astype(np.float32),
-                codec_lib.CodecConfig(
-                    rank=cfg.rank,
-                    hidden=cfg.hidden,
-                    epochs=cfg.epochs,
-                    batch_size=cfg.batch_size,
-                    lr=cfg.lr,
-                    init_reorder=cfg.reorder,
-                    update_reorder=cfg.reorder,
-                    seed=cfg.seed,
-                    entries_per_epoch=min(arr.size, 2_000_000),
-                ),
-            )
-            fit = ct.fitness(arr.astype(np.float32))
+            arr32 = arr.astype(np.float32)
+            try:
+                enc = _fit_leaf(arr32, cfg)
+            except ValueError:
+                enc = None  # budget infeasible for this codec -> store raw
+            fit = enc.fitness(arr32) if enc is not None else -np.inf
             if fit >= cfg.min_fitness:
-                blob = serialization.save_bytes(ct, np.float32)
+                blob = codecs.save_bytes(enc)
                 out[key] = {
-                    "kind": "nttd",
+                    "kind": cfg.codec,
                     "data": blob,
                     "fitness": fit,
                     "dtype": str(arr.dtype),
@@ -88,7 +108,8 @@ def compress_tree(tree, cfg: CodecCheckpointConfig | None = None):
 
 
 def decompress_tree(payload: dict, template):
-    """Inverse of compress_tree (lossy for 'nttd' leaves)."""
+    """Inverse of compress_tree (lossy for codec leaves).  The container's
+    codec-id header drives decoding, so `kind` is informational only."""
     from repro.train.checkpoint import _unflatten_into
 
     values = {}
@@ -96,6 +117,6 @@ def decompress_tree(payload: dict, template):
         if item["kind"] == "raw":
             values[key] = np.load(io.BytesIO(item["data"]))
         else:
-            ct = serialization.load_bytes(item["data"])
-            values[key] = ct.to_dense().astype(np.dtype(item["dtype"]))
+            enc = codecs.load_bytes(item["data"])
+            values[key] = enc.to_dense().astype(np.dtype(item["dtype"]))
     return _unflatten_into(template, values)

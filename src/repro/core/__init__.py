@@ -1,5 +1,9 @@
 """TensorCodec core: NTTD + folding + reordering, competitor baselines,
-and the real serializer.  See DESIGN.md §3-4."""
+and the real serializer.  See DESIGN.md §3-4.
+
+All compressors here are also exposed behind the unified registry —
+``repro.codecs.get_codec("nttd").fit(x, budget)`` — which is the
+preferred entry point for fitting, querying, and on-disk payloads."""
 from repro.core.codec import CodecConfig, CompressedTensor, CompressionLog, compress
 from repro.core.folding import FoldingSpec, make_folding_spec
 from repro.core.nttd import NTTDConfig

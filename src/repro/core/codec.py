@@ -10,10 +10,16 @@ Alternating optimization:
 
 The training step is a single pjit-able program (data-parallel over
 sampled entries); ``shard_batch`` hooks it onto a mesh when one is active.
+
+Prefer the unified API for new code — this module is the NTTD backend
+behind ``repro.codecs.get_codec("nttd").fit(x, budget)``, which also
+handles serialization and budget-matched comparisons against the other
+registered codecs.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any
 
@@ -60,6 +66,15 @@ class CompressedTensor:
     norm_mean: float = 0.0
     norm_std: float = 1.0
 
+    @functools.cached_property
+    def inv_pi(self) -> list[np.ndarray]:
+        """Per-mode inverse permutations (original index -> position).
+
+        The argsort is O(N_k log N_k) per mode; computed once and reused by
+        ``decode``, ``to_dense``, and the serve-layer decode path.
+        """
+        return [np.argsort(p) for p in self.pi]
+
     # -- reconstruction ------------------------------------------------------
     def decode(self, indices: np.ndarray) -> np.ndarray:
         """Approximate entries at ORIGINAL indices [B, d] -> [B]."""
@@ -73,8 +88,7 @@ class CompressedTensor:
         """Full reconstruction in ORIGINAL index order."""
         approx = nttd.generate_tensor(self.params, self.spec, self.cfg, batch)
         approx = approx * self.norm_std + self.norm_mean
-        inv = [np.argsort(p) for p in self.pi]  # original -> position
-        return approx[np.ix_(*inv)]
+        return approx[np.ix_(*self.inv_pi)]
 
     def fitness(self, x: np.ndarray, batch: int = 65536) -> float:
         err = 0.0
@@ -84,7 +98,7 @@ class CompressedTensor:
         return 1.0 - err / max(norm, 1e-30)
 
     def _orig_to_pos(self, indices: np.ndarray) -> np.ndarray:
-        inv = [np.argsort(p) for p in self.pi]
+        inv = self.inv_pi
         pos = np.empty_like(indices)
         for j in range(indices.shape[-1]):
             pos[..., j] = inv[j][indices[..., j]]
@@ -92,17 +106,25 @@ class CompressedTensor:
 
     # -- payload accounting (paper §V-A conventions) ---------------------------
     def payload_bits(self, bytes_per_param: int = 8) -> int:
-        n_params = nttd.count_params(self.params)
-        theta_bits = n_params * bytes_per_param * 8
-        pi_bits = sum(
-            n * max(int(np.ceil(np.log2(n))), 1) if n > 1 else 0
-            for n in self.spec.shape
+        return nttd_payload_bits(
+            nttd.count_params(self.params), self.spec.shape, bytes_per_param
         )
-        norm_bits = 2 * bytes_per_param * 8
-        return theta_bits + pi_bits + norm_bits
 
     def payload_bytes(self, bytes_per_param: int = 8) -> int:
         return (self.payload_bits(bytes_per_param) + 7) // 8
+
+
+def nttd_payload_bits(
+    n_params: int, shape: tuple[int, ...], bytes_per_param: int = 8
+) -> int:
+    """Paper §V-A: theta at ``bytes_per_param``, pi at ceil(log2 N_k) bits
+    per index, plus the two normalization floats."""
+    theta_bits = n_params * bytes_per_param * 8
+    pi_bits = sum(
+        n * max(int(np.ceil(np.log2(n))), 1) if n > 1 else 0 for n in shape
+    )
+    norm_bits = 2 * bytes_per_param * 8
+    return theta_bits + pi_bits + norm_bits
 
 
 @dataclasses.dataclass

@@ -10,6 +10,12 @@ Layout (little-endian):
 
 The pi encoding matches the paper's size accounting exactly
 (N_k * ceil(log2 N_k) bits, §V-A); round-trip is bit-exact.
+
+This v2 layout is now the NTTD *body* inside the multi-codec container
+(``repro.codecs.container``, v3), which prefixes a codec-id header so any
+registered codec round-trips through one format.  ``load_bytes`` there
+still accepts bare v2 blobs; use ``repro.codecs.save_bytes/load_bytes``
+for new code.
 """
 from __future__ import annotations
 

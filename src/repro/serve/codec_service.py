@@ -1,0 +1,162 @@
+"""Compressed-tensor serving: batched ``decode_at`` over codec payloads.
+
+The serve layer's first compressed-tensor endpoint.  A service instance
+hosts any number of named :class:`repro.codecs.Encoded` payloads (loaded
+from container bytes or handed over in memory) and answers entry queries
+at ORIGINAL indices without ever densifying the tensors it serves
+(except SZ-lite, which is a stream codec and caches one reconstruction).
+
+Two query paths:
+
+- ``decode_at(name, indices)`` — direct, chunked at ``max_batch`` so a
+  multi-million-entry request never materializes one giant device batch;
+- ``submit(name, indices) -> ticket`` + ``flush()`` — request coalescing:
+  queued requests are grouped per payload and decoded in ONE batched
+  ``decode_at`` call each, then split back per ticket.  This is the
+  serve-side analogue of continuous batching for entry lookups.
+
+Malformed requests (wrong index width, out-of-range indices, unknown
+payload) are rejected at ``submit`` time so they can never poison a
+coalesced batch; if a decode still fails at flush, only that payload's
+tickets land in ``failed`` — every other queued request completes.
+
+Per-payload state is kept warm across requests: the Encoded object stays
+loaded, so NTTD's cached inverse permutations
+(``CompressedTensor.inv_pi``) are computed once at first decode and
+reused for every subsequent query.
+
+    svc = CodecService()
+    svc.load("embed", blob)              # container bytes, any codec id
+    t0 = svc.submit("embed", idx_a)
+    t1 = svc.submit("embed", idx_b)
+    out = svc.flush()                    # {t0: values_a, t1: values_b}
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro import codecs
+
+
+@dataclasses.dataclass
+class PayloadInfo:
+    codec: str
+    payload_bytes: int
+    requests: int = 0
+    entries_decoded: int = 0
+    decode_calls: int = 0
+
+
+class CodecService:
+    def __init__(self, max_batch: int = 65536):
+        self.max_batch = max_batch
+        self._payloads: dict[str, codecs.Encoded] = {}
+        self._info: dict[str, PayloadInfo] = {}
+        self._queue: list[tuple[int, str, np.ndarray]] = []
+        self._next_ticket = 0
+        #: tickets whose payload group raised during the LAST flush,
+        #: ticket -> error (reset at the start of each flush)
+        self.failed: dict[int, Exception] = {}
+
+    # ------------------------------------------------------------------ load
+    def load(self, name: str, payload: bytes | codecs.Encoded) -> PayloadInfo:
+        """Register a payload under ``name``; bytes go through the container
+        loader so the codec-id header picks the decoder."""
+        enc = codecs.load_bytes(payload) if isinstance(payload, bytes) else payload
+        self._payloads[name] = enc
+        self._info[name] = PayloadInfo(enc.codec_name, enc.payload_bytes())
+        return self._info[name]
+
+    def unload(self, name: str) -> None:
+        self._payloads.pop(name, None)
+        self._info.pop(name, None)
+
+    def payloads(self) -> list[str]:
+        return sorted(self._payloads)
+
+    def info(self, name: str) -> PayloadInfo:
+        return self._info[name]
+
+    def _get(self, name: str) -> codecs.Encoded:
+        try:
+            return self._payloads[name]
+        except KeyError:
+            raise KeyError(
+                f"no payload {name!r}; loaded: {', '.join(self.payloads())}"
+            ) from None
+
+    def _validate(self, name: str, enc: codecs.Encoded,
+                  indices: np.ndarray) -> np.ndarray:
+        idx = np.asarray(indices)
+        shape = enc.shape
+        if idx.ndim != 2 or idx.shape[1] != len(shape):
+            raise ValueError(
+                f"indices for {name!r} must be [B, {len(shape)}], got {idx.shape}"
+            )
+        if not np.issubdtype(idx.dtype, np.integer):
+            raise ValueError(f"indices must be integral, got {idx.dtype}")
+        if idx.size and ((idx < 0).any() or (idx >= np.asarray(shape)).any()):
+            raise ValueError(f"indices out of range for shape {shape}")
+        return idx
+
+    # ---------------------------------------------------------------- direct
+    def decode_at(self, name: str, indices: np.ndarray) -> np.ndarray:
+        """Chunked decode so arbitrarily large requests stream through
+        fixed-size batches.  Indices are validated up front; stats count
+        only work that actually decoded."""
+        enc = self._get(name)
+        idx = self._validate(name, enc, indices)
+        if idx.shape[0] <= self.max_batch:
+            out, calls = np.asarray(enc.decode_at(idx)), 1
+        else:
+            parts = [
+                np.asarray(enc.decode_at(idx[s : s + self.max_batch]))
+                for s in range(0, idx.shape[0], self.max_batch)
+            ]
+            out, calls = np.concatenate(parts), len(parts)
+        info = self._info[name]
+        info.requests += 1
+        info.entries_decoded += idx.shape[0]
+        info.decode_calls += calls
+        return out
+
+    # --------------------------------------------------------------- batched
+    def submit(self, name: str, indices: np.ndarray) -> int:
+        """Queue a request; returns a ticket resolved by the next flush().
+
+        Validates eagerly — a malformed request raises HERE and never
+        enters the queue, so it cannot sink the coalesced batch."""
+        idx = self._validate(name, self._get(name), indices)
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((ticket, name, idx))
+        return ticket
+
+    def flush(self) -> dict[int, np.ndarray]:
+        """Decode all queued requests, one coalesced batch per payload.
+
+        A payload group that still fails is isolated: its tickets go to
+        ``self.failed`` (ticket -> exception, reset each flush) and the
+        other groups' results are returned normally."""
+        self.failed = {}
+        by_payload: dict[str, list[tuple[int, np.ndarray]]] = {}
+        for ticket, name, idx in self._queue:
+            by_payload.setdefault(name, []).append((ticket, idx))
+        self._queue.clear()
+        results: dict[int, np.ndarray] = {}
+        for name, reqs in by_payload.items():
+            merged = np.concatenate([idx for _, idx in reqs], axis=0)
+            try:
+                values = self.decode_at(name, merged)
+            except Exception as e:  # noqa: BLE001 — isolate the bad group
+                for ticket, _ in reqs:
+                    self.failed[ticket] = e
+                continue
+            self._info[name].requests += len(reqs) - 1  # decode_at counted one
+            off = 0
+            for ticket, idx in reqs:
+                results[ticket] = values[off : off + idx.shape[0]]
+                off += idx.shape[0]
+        return results

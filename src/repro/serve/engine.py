@@ -54,7 +54,6 @@ class ServeEngine:
         self.slot_len = np.zeros(batch_slots, np.int32)
         self.slot_new = np.zeros(batch_slots, np.int32)
         self.slot_out: list[list[int]] = [[] for _ in range(batch_slots)]
-        self.cache = model.init_cache(cfg, 1, max_len)  # per-slot caches
         self.caches = [model.init_cache(cfg, 1, max_len) for _ in range(batch_slots)]
         self.last_tok = np.zeros(batch_slots, np.int32)
 
