@@ -9,6 +9,19 @@ import numpy as np
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
+# Shared registry-fit protocol for the scaling figures (fig5/fig6): every
+# codec gets the same ~5% of the fp64 dense bytes, and NTTD's work knob is
+# a single epoch so time-per-entry stays constant across sizes.
+# eval_batch matches batch_size so per-epoch work (train + fitness eval)
+# is proportional to entries even for tensors smaller than one 64k batch
+NTTD_FIT_OPTS = dict(rank=8, hidden=8, epochs=1, batch_size=4096,
+                     eval_batch=4096, update_reorder=False)
+
+
+def scaling_budget(n_entries: int) -> int:
+    """~5% of the dense fp64 bytes, floored so tiny tensors stay feasible."""
+    return max(n_entries * 8 // 20, 2048)
+
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.3f},{derived}")

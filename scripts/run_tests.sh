@@ -41,3 +41,11 @@ python -m pytest -x -q --ignore=tests/test_spmd.py
 
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
     python -m pytest -x -q tests/test_spmd.py
+
+# Streaming smoke: synthetic SlabSource -> fit_stream -> chunked container
+# -> CodecService.load_stream -> decode_at round-trip, and a CI-sized
+# entries/sec baseline written to benchmarks/results/BENCH_stream.json so
+# the streaming-throughput trajectory is tracked from PR to PR.
+python -m benchmarks.fig5_compress_scaling --stream --smoke
+test -s benchmarks/results/BENCH_stream.json
+echo "streaming smoke OK: $(tr -d '\n' < benchmarks/results/BENCH_stream.json | head -c 200)"

@@ -83,6 +83,19 @@ class NTTDEncoded(Encoded):
 class NTTDCodec(Codec):
     encoded_cls = NTTDEncoded
 
+    def stream_fitter(
+        self, shape: tuple[int, ...], budget: int | None = None, **opts: Any
+    ):
+        """Native streaming: warm-started minibatch SGD with reservoir
+        replay (repro.stream.fit.NTTDStreamFitter).  Budget translates to
+        (rank, hidden) exactly as in ``fit``."""
+        from repro.stream.fit import NTTDStreamFitter
+
+        if budget is not None and "rank" not in opts:
+            rank = self._rank_for_budget(tuple(shape), int(budget), opts)
+            opts = {**opts, "rank": rank, "hidden": opts.get("hidden", 2 * rank)}
+        return NTTDStreamFitter(tuple(shape), **opts)
+
     def fit(self, x: np.ndarray, budget: int | None = None, **opts: Any) -> NTTDEncoded:
         """Options are :class:`repro.core.codec.CodecConfig` fields.  When a
         byte ``budget`` is given without an explicit ``rank``, the largest
@@ -161,6 +174,29 @@ class TTEncoded(Encoded):
 @register("ttd")
 class TTDCodec(Codec):
     encoded_cls = TTEncoded
+
+    def stream_fitter(
+        self,
+        shape: tuple[int, ...],
+        budget: int | None = None,
+        *,
+        max_rank: int | None = None,
+        rel_eps: float = 0.02,
+    ):
+        """Native streaming: TT-ICE-style incremental basis expansion over
+        mode-0 slices (repro.stream.fit.TTICEStreamFitter)."""
+        from repro.stream.fit import TTICEStreamFitter
+
+        if max_rank is None:
+            if budget is None:
+                raise ValueError("ttd.stream_fitter needs a budget or max_rank")
+            max_rank = max(
+                ttd.tt_rank_for_budget(
+                    tuple(shape), int(budget) // self.bytes_per_param
+                ),
+                1,
+            )
+        return TTICEStreamFitter(tuple(shape), max_rank=max_rank, rel_eps=rel_eps)
 
     def fit(
         self,
@@ -358,6 +394,10 @@ class TRCodec(Codec):
 @dataclasses.dataclass
 class SZEncoded(Encoded):
     sz: szlite.SZCompressed
+    #: rebuilds vs reuses of the dense reconstruction cache; the serve
+    #: layer's byte-budgeted LRU reads these and evicts via drop_caches()
+    cache_hits: int = dataclasses.field(default=0, compare=False)
+    cache_misses: int = dataclasses.field(default=0, compare=False)
 
     @property
     def shape(self) -> tuple[int, ...]:
@@ -365,12 +405,23 @@ class SZEncoded(Encoded):
 
     @property
     def _dense(self) -> np.ndarray:
-        # stream codec: one cached full decompression backs decode_at
+        # stream codec: one cached full decompression backs decode_at;
+        # droppable (and re-buildable) under a serve-side byte budget
         cached = getattr(self, "_dense_cache", None)
         if cached is None:
+            self.cache_misses += 1
             cached = szlite.decompress(self.sz)
             self._dense_cache = cached
+        else:
+            self.cache_hits += 1
         return cached
+
+    def cache_nbytes(self) -> int:
+        cached = getattr(self, "_dense_cache", None)
+        return int(cached.nbytes) if cached is not None else 0
+
+    def drop_caches(self) -> None:
+        self._dense_cache = None
 
     def decode_at(self, indices: np.ndarray) -> np.ndarray:
         idx = _as_index_batch(indices, len(self.sz.shape))

@@ -81,6 +81,57 @@ class Encoded(abc.ABC):
 
         return container.save_bytes(self)
 
+    # -- serve-layer cache hooks ---------------------------------------------
+    def cache_nbytes(self) -> int:
+        """Bytes of droppable decode acceleration state this payload holds
+        (e.g. SZ-lite's cached dense reconstruction).  The serve layer's
+        byte-budgeted LRU accounts and evicts through these two hooks."""
+        return 0
+
+    def drop_caches(self) -> None:
+        """Release droppable decode state; decoding stays correct, the next
+        query just pays the rebuild."""
+
+
+class StreamFitter(abc.ABC):
+    """Incremental fit state: feed slabs with ``update``, then ``finalize``.
+
+    The streaming analogue of ``Codec.fit`` — a fitter is handed
+    ``(indices, values)`` slabs one at a time (see ``repro.stream.source``)
+    and must be deterministic in the slab sequence, so a fit resumed from a
+    source cursor produces a bit-identical payload to an uninterrupted run.
+    """
+
+    @abc.abstractmethod
+    def update(self, indices: np.ndarray, values: np.ndarray) -> None:
+        """Incorporate one slab: original multi-indices [B, d] + values [B]."""
+
+    @abc.abstractmethod
+    def finalize(self) -> Encoded:
+        """Produce the payload for everything seen so far."""
+
+
+class AccumulatingFitter(StreamFitter):
+    """Fallback for codecs without native streaming: scatter arriving slabs
+    into a dense buffer, then run the one-shot ``fit``.  Correct for any
+    codec but NOT out-of-core — the buffer is the full tensor."""
+
+    def __init__(self, codec: "Codec", shape: tuple[int, ...],
+                 budget: int | None, opts: dict[str, Any]):
+        self._codec = codec
+        self._budget = budget
+        self._opts = opts
+        self._x = np.zeros(shape, dtype=np.float32)
+
+    def update(self, indices: np.ndarray, values: np.ndarray) -> None:
+        idx = np.asarray(indices)
+        self._x[tuple(idx[:, k] for k in range(idx.shape[1]))] = np.asarray(
+            values, np.float32
+        )
+
+    def finalize(self) -> Encoded:
+        return self._codec.fit(self._x, self._budget, **self._opts)
+
 
 class Codec(abc.ABC):
     """A fit backend producing :class:`Encoded` payloads."""
@@ -97,6 +148,47 @@ class Codec(abc.ABC):
     def fit(self, x: np.ndarray, budget: int | None = None, **opts: Any) -> Encoded:
         """Compress ``x`` to at most ``budget`` payload bytes (accounting
         convention), or per ``opts`` when codec-native knobs are given."""
+
+    # -- streaming (optional hook; repro.stream drives it) -------------------
+    def stream_fitter(
+        self, shape: tuple[int, ...], budget: int | None = None, **opts: Any
+    ) -> StreamFitter:
+        """Return an incremental fitter for a tensor of ``shape``.  Codecs
+        with native streaming (NTTD's warm-started SGD, TT's TT-ICE-style
+        update) override this; the default accumulates then fits."""
+        return AccumulatingFitter(self, tuple(int(s) for s in shape), budget, opts)
+
+    def fit_stream(
+        self,
+        source: Any,
+        budget: int | None = None,
+        *,
+        start: int = 0,
+        stop: int | None = None,
+        passes: int = 1,
+        fitter: StreamFitter | None = None,
+        **opts: Any,
+    ) -> Encoded:
+        """Fit over a :class:`repro.stream.SlabSource` cursor range.
+
+        ``passes`` re-reads the cursor range that many times (the resumable
+        source makes multi-epoch out-of-core training a re-read, not a
+        materialization) — iterative fitters (NTTD) keep improving, one-shot
+        fitters just see repeated data.  Pass a ``fitter`` (from
+        ``stream_fitter``) to resume: processing slabs ``[0, k)`` then
+        ``[k, n)`` on one fitter yields a payload bit-identical to
+        processing ``[0, n)`` in one call.
+        """
+        if fitter is None:
+            fitter = self.stream_fitter(tuple(source.shape), budget, **opts)
+        elif opts or budget is not None:
+            raise ValueError("budget/opts belong to stream_fitter, not resume")
+        stop = source.n_slabs if stop is None else stop
+        for _ in range(passes):
+            for cursor in range(start, stop):
+                slab = source.slab_at(cursor)
+                fitter.update(slab.indices, slab.values)
+        return fitter.finalize()
 
 
 # ---------------------------------------------------------------------------

@@ -1,14 +1,27 @@
 """Versioned self-describing container for ANY registered codec.
 
 Extends the original NTTD-only TCDC layout (core/serialization.py, v2)
-with a codec-id header, so every codec round-trips to disk bit-exactly:
+with a codec-id header, so every codec round-trips to disk bit-exactly.
+Monolithic layout (``flags == 0``):
 
     magic 'TCDC' | u16 version=3 | u8 flags | u8 name_len | name ascii
     u64 body_len | u32 crc32(body) | body
 
-The body is the codec's own ``Encoded.to_bytes()`` payload; for NTTD it
-is exactly the legacy v2 blob, and ``load_bytes`` still accepts bare v2
-blobs (headerless NTTD payloads written by older checkpoints).
+Chunked layout (``flags & FLAG_CHUNKED``, written by
+``repro.stream.writer``) replaces the single body with chunks appended
+as a streaming fit progresses, indexed by a footer so the file is valid
+the moment the writer closes — no seeking back to patch a length field:
+
+    header (as above) | chunk bytes ... | footer | u64 footer_len | 'TCDX'
+    footer = u32 n_chunks | n x (u64 offset | u64 length | u32 crc32)
+
+The concatenated chunks ARE the codec's ``Encoded.to_bytes()`` body, so
+every codec gets chunked persistence for free, and readers that want the
+whole payload just join the chunks.  ``load_bytes`` accepts monolithic
+v3, chunked v3, and bare legacy v2 blobs (headerless NTTD payloads
+written by older checkpoints); ``open_chunks`` exposes the index without
+touching chunk bytes, which is what the serve layer's lazy mmap-backed
+``load_stream`` builds on.
 
 Array (de)serialization helpers are shared by the adapter bodies:
 ``write_array``/``read_array`` preserve dtype and shape so float64
@@ -16,7 +29,9 @@ baselines round-trip bit-exactly.
 """
 from __future__ import annotations
 
+import dataclasses
 import io
+import mmap
 import struct
 import zlib
 
@@ -26,7 +41,10 @@ from repro.codecs.base import Encoded, get_codec
 
 MAGIC = b"TCDC"
 VERSION = 3
+FOOTER_MAGIC = b"TCDX"
+FLAG_CHUNKED = 0x01
 _LEGACY_NTTD_VERSION = 2
+_TRAILER_LEN = 12  # u64 footer_len + FOOTER_MAGIC
 
 _DTYPES = {
     0: np.float16,
@@ -90,50 +108,109 @@ def read_array(buf: io.BytesIO) -> np.ndarray:
 # ---------------------------------------------------------------------------
 # container
 # ---------------------------------------------------------------------------
-def save_bytes(enc: Encoded) -> bytes:
-    name = enc.codec_name.encode("ascii")
+@dataclasses.dataclass(frozen=True)
+class ChunkEntry:
+    offset: int  # absolute file offset of the chunk's first byte
+    length: int
+    crc: int
+
+
+def pack_header(codec_name: str, flags: int = 0) -> bytes:
+    name = codec_name.encode("ascii")
     if not name or len(name) > 255:
-        raise ValueError(f"bad codec id {enc.codec_name!r}")
+        raise ValueError(f"bad codec id {codec_name!r}")
+    return MAGIC + struct.pack("<HBB", VERSION, flags, len(name)) + name
+
+
+def pack_footer(chunks: list[ChunkEntry]) -> bytes:
+    footer = struct.pack("<I", len(chunks)) + b"".join(
+        struct.pack("<QQI", c.offset, c.length, c.crc) for c in chunks
+    )
+    return footer + struct.pack("<Q", len(footer)) + FOOTER_MAGIC
+
+
+def _parse_header(data) -> tuple[int, str, int]:
+    """-> (flags, codec name, offset just past the header)."""
+    if len(data) < 8:
+        raise ValueError("truncated payload: header")
+    flags, name_len = struct.unpack("<BB", bytes(data[6:8]))
+    if len(data) < 8 + name_len:
+        raise ValueError("truncated payload: codec id")
+    name = bytes(data[8 : 8 + name_len]).decode("ascii")
+    return flags, name, 8 + name_len
+
+
+def _parse_chunk_index(data, header_end: int) -> list[ChunkEntry]:
+    if len(data) < header_end + _TRAILER_LEN:
+        raise ValueError("truncated payload: chunk trailer")
+    if bytes(data[-4:]) != FOOTER_MAGIC:
+        raise ValueError("truncated payload: chunk footer magic missing")
+    (footer_len,) = struct.unpack("<Q", bytes(data[-12:-4]))
+    footer_start = len(data) - _TRAILER_LEN - footer_len
+    if footer_start < header_end:
+        raise ValueError("corrupt payload: chunk footer overlaps header")
+    footer = bytes(data[footer_start : footer_start + footer_len])
+    if len(footer) < 4:
+        raise ValueError("truncated payload: chunk index")
+    (n,) = struct.unpack("<I", footer[:4])
+    if len(footer) != 4 + 20 * n:
+        raise ValueError("corrupt payload: chunk index length mismatch")
+    chunks = []
+    for i in range(n):
+        off, length, crc = struct.unpack("<QQI", footer[4 + 20 * i : 24 + 20 * i])
+        if off < header_end or off + length > footer_start:
+            raise ValueError("corrupt payload: chunk outside data region")
+        chunks.append(ChunkEntry(off, length, crc))
+    return chunks
+
+
+def read_chunk(data, chunk: ChunkEntry) -> bytes:
+    raw = bytes(data[chunk.offset : chunk.offset + chunk.length])
+    if len(raw) < chunk.length:
+        raise ValueError("truncated payload: chunk body")
+    if zlib.crc32(raw) & 0xFFFFFFFF != chunk.crc:
+        raise ValueError("corrupt payload: chunk checksum mismatch")
+    return raw
+
+
+def save_bytes(enc: Encoded) -> bytes:
     body = enc.to_bytes()
     out = io.BytesIO()
-    out.write(MAGIC)
-    out.write(struct.pack("<HBB", VERSION, 0, len(name)))
-    out.write(name)
+    out.write(pack_header(enc.codec_name))
     out.write(struct.pack("<QI", len(body), zlib.crc32(body) & 0xFFFFFFFF))
     out.write(body)
     return out.getvalue()
 
 
 def load_bytes(data: bytes) -> Encoded:
-    if len(data) < 4 or data[:4] != MAGIC:
+    if len(data) < 4 or bytes(data[:4]) != MAGIC:
         raise ValueError("not a TensorCodec container")
     if len(data) < 6:
         raise ValueError("truncated payload: version header")
-    (version,) = struct.unpack("<H", data[4:6])
+    (version,) = struct.unpack("<H", bytes(data[4:6]))
     if version == _LEGACY_NTTD_VERSION:
         # headerless NTTD blob from core/serialization.py (older checkpoints)
         from repro.codecs.adapters import NTTDEncoded
 
-        return NTTDEncoded.from_bytes(data)
+        return NTTDEncoded.from_bytes(bytes(data))
     if version != VERSION:
         raise ValueError(f"unsupported container version {version}")
-    if len(data) < 8:
-        raise ValueError("truncated payload: header")
-    _flags, name_len = struct.unpack("<BB", data[6:8])
-    off = 8
-    if len(data) < off + name_len + 12:
-        raise ValueError("truncated payload: codec id")
-    name = data[off : off + name_len].decode("ascii")
-    off += name_len
-    body_len, crc = struct.unpack("<QI", data[off : off + 12])
-    off += 12
-    body = data[off : off + body_len]
-    if len(body) < body_len:
-        raise ValueError(
-            f"truncated payload: body has {len(body)} of {body_len} bytes"
-        )
-    if zlib.crc32(body) & 0xFFFFFFFF != crc:
-        raise ValueError("corrupt payload: body checksum mismatch")
+    flags, name, off = _parse_header(data)
+    if flags & FLAG_CHUNKED:
+        chunks = _parse_chunk_index(data, off)
+        body = b"".join(read_chunk(data, c) for c in chunks)
+    else:
+        if len(data) < off + 12:
+            raise ValueError("truncated payload: codec id")
+        body_len, crc = struct.unpack("<QI", bytes(data[off : off + 12]))
+        off += 12
+        body = bytes(data[off : off + body_len])
+        if len(body) < body_len:
+            raise ValueError(
+                f"truncated payload: body has {len(body)} of {body_len} bytes"
+            )
+        if zlib.crc32(body) & 0xFFFFFFFF != crc:
+            raise ValueError("corrupt payload: body checksum mismatch")
     try:
         codec = get_codec(name)
     except KeyError:
@@ -151,3 +228,34 @@ def save_file(path: str, enc: Encoded) -> int:
 def load_file(path: str) -> Encoded:
     with open(path, "rb") as f:
         return load_bytes(f.read())
+
+
+def open_chunks(path: str) -> tuple[str, list[ChunkEntry], memoryview]:
+    """Open a v3 file lazily: parse header + chunk index, mmap the rest.
+
+    Returns ``(codec_name, chunks, mmap-backed view)`` without reading any
+    chunk bytes — the serve layer materializes chunks on demand through
+    ``read_chunk``.  Monolithic files come back as one pseudo-chunk, so
+    callers need not care how the payload was written.
+    """
+    with open(path, "rb") as f:
+        mm = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
+    view = memoryview(mm)
+    if len(view) < 6 or bytes(view[:4]) != MAGIC:
+        raise ValueError(f"{path}: not a TensorCodec container")
+    (version,) = struct.unpack("<H", bytes(view[4:6]))
+    if version != VERSION:
+        raise ValueError(
+            f"{path}: lazy open needs a v{VERSION} container, got v{version}"
+        )
+    flags, name, off = _parse_header(view)
+    if flags & FLAG_CHUNKED:
+        chunks = _parse_chunk_index(view, off)
+    else:
+        if len(view) < off + 12:
+            raise ValueError("truncated payload: codec id")
+        body_len, crc = struct.unpack("<QI", bytes(view[off : off + 12]))
+        if len(view) < off + 12 + body_len:
+            raise ValueError("truncated payload: body")
+        chunks = [ChunkEntry(off + 12, body_len, crc)]
+    return name, chunks, view

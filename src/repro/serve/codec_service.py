@@ -1,43 +1,56 @@
 """Compressed-tensor serving: batched ``decode_at`` over codec payloads.
 
-The serve layer's first compressed-tensor endpoint.  A service instance
-hosts any number of named :class:`repro.codecs.Encoded` payloads (loaded
-from container bytes or handed over in memory) and answers entry queries
-at ORIGINAL indices without ever densifying the tensors it serves
-(except SZ-lite, which is a stream codec and caches one reconstruction).
+A service instance hosts any number of named :class:`repro.codecs.Encoded`
+payloads and answers entry queries at ORIGINAL indices without ever
+densifying the tensors it serves (except SZ-lite, which is a stream codec
+and caches one reconstruction — bounded, see below).
 
-Two query paths:
+Three load paths:
 
-- ``decode_at(name, indices)`` — direct, chunked at ``max_batch`` so a
-  multi-million-entry request never materializes one giant device batch;
+- ``load(name, blob_or_encoded)`` — resident payload, as before;
+- ``load_stream(name, path)`` — LAZY: the container-v3 file is mmapped
+  and only its header + footer chunk index are parsed; chunk bytes are
+  materialized on first decode and can be evicted again under the cache
+  budget, so an instance can host more payload bytes than RAM;
+- ``load_stream(name, path, tile_entries=T)`` — additionally routes
+  queries through a decode-tile cache: the flat index space is cut into
+  T-entry tiles, each decoded once and reused across overlapping queries
+  (hit/miss counters per payload, byte-budgeted with everything else).
+
+``cache_bytes`` is one LRU byte budget over all droppable decode state:
+materialized lazy payload bodies, SZ-lite dense reconstructions (via the
+``Encoded.cache_nbytes``/``drop_caches`` hooks), and decode tiles.
+Accounting happens after each decode, so the payload answering the
+current query is never yanked mid-decode; ``cache_stats`` totals
+hits/misses/evictions/resident bytes across the instance.
+
+Two query paths, unchanged from the first version of this service:
+
+- ``decode_at(name, indices)`` — direct, chunked at ``max_batch``;
 - ``submit(name, indices) -> ticket`` + ``flush()`` — request coalescing:
   queued requests are grouped per payload and decoded in ONE batched
-  ``decode_at`` call each, then split back per ticket.  This is the
-  serve-side analogue of continuous batching for entry lookups.
+  ``decode_at`` call each, then split back per ticket.
 
 Malformed requests (wrong index width, out-of-range indices, unknown
 payload) are rejected at ``submit`` time so they can never poison a
 coalesced batch; if a decode still fails at flush, only that payload's
 tickets land in ``failed`` — every other queued request completes.
 
-Per-payload state is kept warm across requests: the Encoded object stays
-loaded, so NTTD's cached inverse permutations
-(``CompressedTensor.inv_pi``) are computed once at first decode and
-reused for every subsequent query.
-
-    svc = CodecService()
-    svc.load("embed", blob)              # container bytes, any codec id
-    t0 = svc.submit("embed", idx_a)
-    t1 = svc.submit("embed", idx_b)
-    out = svc.flush()                    # {t0: values_a, t1: values_b}
+    svc = CodecService(cache_bytes=1 << 28)
+    svc.load_stream("embed", "embed.tcdc")      # mmap + chunk index only
+    svc.decode_at("embed", idx)                 # materializes on demand
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+from typing import Callable
 
 import numpy as np
 
 from repro import codecs
+from repro.codecs import container
+from repro.core.nttd import flat_to_multi
 
 
 @dataclasses.dataclass
@@ -47,13 +60,49 @@ class PayloadInfo:
     requests: int = 0
     entries_decoded: int = 0
     decode_calls: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    resident_bytes: int = 0
+
+
+@dataclasses.dataclass
+class _CacheEntry:
+    nbytes: int
+    value: np.ndarray | None  # decode tiles live here; payloads evict via fn
+    on_evict: Callable[[], None] | None = None
+
+
+@dataclasses.dataclass
+class _StreamPayload:
+    path: str
+    codec: str
+    chunks: list[container.ChunkEntry]
+    view: memoryview
+    tile_entries: int | None
+    body_nbytes: int
+    enc: codecs.Encoded | None = None
 
 
 class CodecService:
-    def __init__(self, max_batch: int = 65536):
+    def __init__(self, max_batch: int = 65536, cache_bytes: int | None = None):
         self.max_batch = max_batch
+        #: byte budget for droppable decode state; None = unbounded (legacy)
+        self.cache_bytes = cache_bytes
         self._payloads: dict[str, codecs.Encoded] = {}
+        self._streams: dict[str, _StreamPayload] = {}
         self._info: dict[str, PayloadInfo] = {}
+        self._cache: collections.OrderedDict[tuple, _CacheEntry] = (
+            collections.OrderedDict()
+        )
+        self._enc_counters_seen: dict[str, tuple[int, int]] = {}
+        self.cache_stats = CacheStats()
         self._queue: list[tuple[int, str, np.ndarray]] = []
         self._next_ticket = 0
         #: tickets whose payload group raised during the LAST flush,
@@ -62,30 +111,193 @@ class CodecService:
 
     # ------------------------------------------------------------------ load
     def load(self, name: str, payload: bytes | codecs.Encoded) -> PayloadInfo:
-        """Register a payload under ``name``; bytes go through the container
-        loader so the codec-id header picks the decoder."""
+        """Register a resident payload under ``name``; bytes go through the
+        container loader so the codec-id header picks the decoder."""
         enc = codecs.load_bytes(payload) if isinstance(payload, bytes) else payload
+        self._drop_named_cache_entries(name)
+        self._streams.pop(name, None)
+        self._enc_counters_seen.pop(name, None)
         self._payloads[name] = enc
         self._info[name] = PayloadInfo(enc.codec_name, enc.payload_bytes())
         return self._info[name]
 
-    def unload(self, name: str) -> None:
+    def load_stream(
+        self, name: str, path: str, *, tile_entries: int | None = None
+    ) -> PayloadInfo:
+        """Register a container-v3 file lazily: mmap it, parse only the
+        header and chunk index.  The payload body is materialized at first
+        decode and is evictable under ``cache_bytes`` thereafter.  With
+        ``tile_entries``, queries go through the decode-tile cache."""
+        codec_name, chunks, view = container.open_chunks(path)
+        try:  # reject unknown codec ids at LOAD time, exactly like load()
+            codecs.get_codec(codec_name)
+        except KeyError:
+            view.release()
+            raise ValueError(
+                f"unknown codec id {codec_name!r} in container {path}"
+            ) from None
+        self._drop_named_cache_entries(name)
+        self._enc_counters_seen.pop(name, None)
         self._payloads.pop(name, None)
+        body_nbytes = sum(c.length for c in chunks)
+        self._streams[name] = _StreamPayload(
+            path, codec_name, chunks, view, tile_entries, body_nbytes
+        )
+        self._info[name] = PayloadInfo(codec_name, body_nbytes)
+        return self._info[name]
+
+    def unload(self, name: str) -> None:
+        self._drop_named_cache_entries(name)
+        self._enc_counters_seen.pop(name, None)
+        self._payloads.pop(name, None)
+        sp = self._streams.pop(name, None)
+        if sp is not None:
+            sp.view.release()
         self._info.pop(name, None)
 
     def payloads(self) -> list[str]:
-        return sorted(self._payloads)
+        return sorted(set(self._payloads) | set(self._streams))
 
     def info(self, name: str) -> PayloadInfo:
         return self._info[name]
 
-    def _get(self, name: str) -> codecs.Encoded:
-        try:
+    def _get(self, name: str, count: bool = True) -> codecs.Encoded:
+        """Resolve a payload, materializing lazy ones.  ``count=False``
+        (validation-only paths like submit) skips the hit counter so one
+        logical decode is not double-counted; a materialization is real
+        work and is always counted as a miss."""
+        if name in self._payloads:
             return self._payloads[name]
-        except KeyError:
+        sp = self._streams.get(name)
+        if sp is None:
             raise KeyError(
                 f"no payload {name!r}; loaded: {', '.join(self.payloads())}"
-            ) from None
+            )
+        if sp.enc is None:
+            self.cache_stats.misses += 1
+            self._info[name].cache_misses += 1
+            body = b"".join(container.read_chunk(sp.view, c) for c in sp.chunks)
+            sp.enc = codecs.get_codec(sp.codec).encoded_cls.from_bytes(body)
+            self._info[name].payload_bytes = sp.enc.payload_bytes()
+        elif count:
+            self.cache_stats.hits += 1
+            self._info[name].cache_hits += 1
+        return sp.enc
+
+    # ----------------------------------------------------------------- cache
+    def _drop_named_cache_entries(self, name: str) -> None:
+        for key in [k for k in self._cache if k[1] == name]:
+            self._cache_evict(key)
+
+    def _cache_evict(self, key: tuple) -> None:
+        entry = self._cache.pop(key)
+        self.cache_stats.resident_bytes -= entry.nbytes
+        self.cache_stats.evictions += 1
+        if entry.on_evict is not None:
+            entry.on_evict()
+
+    def _cache_put(self, key: tuple, entry: _CacheEntry) -> None:
+        old = self._cache.pop(key, None)
+        if old is not None:
+            self.cache_stats.resident_bytes -= old.nbytes
+        self._cache[key] = entry
+        self.cache_stats.resident_bytes += entry.nbytes
+        if self.cache_bytes is None:
+            return
+        while self.cache_stats.resident_bytes > self.cache_bytes and self._cache:
+            self._cache_evict(next(iter(self._cache)))
+
+    def _cache_touch(self, key: tuple) -> _CacheEntry | None:
+        entry = self._cache.get(key)
+        if entry is not None:
+            self._cache.move_to_end(key)
+        return entry
+
+    def _account_decode_state(self, name: str, enc: codecs.Encoded) -> None:
+        """Post-decode accounting: droppable payload state (SZ-lite dense
+        cache, materialized lazy bodies) joins the LRU ledger."""
+        info = self._info[name]
+        sp = self._streams.get(name)
+        if sp is not None and sp.enc is not None:
+            nbytes = sp.body_nbytes + enc.cache_nbytes()
+
+            def drop(sp=sp, name=name):
+                if sp.enc is not None:
+                    sp.enc.drop_caches()
+                    sp.enc = None
+                # the rebuilt Encoded starts its counters at zero; reset the
+                # mirror baseline with it or the next sync under-counts
+                self._enc_counters_seen.pop(name, None)
+
+            self._cache_put(("enc", name), _CacheEntry(nbytes, None, drop))
+        elif enc.cache_nbytes():
+            self._cache_put(
+                ("deccache", name),
+                _CacheEntry(enc.cache_nbytes(), None, enc.drop_caches),
+            )
+        # mirror per-payload counters kept by the Encoded itself (SZ-lite):
+        # enc counters are cumulative, so fold in only the delta since the
+        # last sync (re-registration under a new name resets the baseline)
+        own = (getattr(enc, "cache_hits", 0), getattr(enc, "cache_misses", 0))
+        if isinstance(own[0], int) and any(own):
+            seen = self._enc_counters_seen.get(name, (0, 0))
+            info.cache_hits += own[0] - seen[0]
+            info.cache_misses += own[1] - seen[1]
+            self._enc_counters_seen[name] = own
+
+    # ----------------------------------------------------------------- tiles
+    def _decode_tiled(
+        self, name: str, sp: _StreamPayload, enc: codecs.Encoded, idx: np.ndarray
+    ) -> tuple[np.ndarray, int]:
+        """Answer a query from T-entry decode tiles; returns (values,
+        number of tiles actually decoded)."""
+        shape = enc.shape
+        t = sp.tile_entries
+        n_entries = int(np.prod(shape))
+        flat = np.ravel_multi_index(
+            tuple(idx[:, k] for k in range(idx.shape[1])), shape
+        )
+        tids = flat // t
+        if not len(flat):  # delegate so the dtype matches the untiled path
+            return self._decode_batched(enc, idx), 0
+        out = None
+        decoded = 0
+        info = self._info[name]
+        for tid in np.unique(tids):
+            key = ("tile", name, int(tid))
+            entry = self._cache_touch(key)
+            if entry is None:
+                self.cache_stats.misses += 1
+                info.cache_misses += 1
+                decoded += 1
+                start = int(tid) * t
+                stop = min(start + t, n_entries)
+                tpos = flat_to_multi(np.arange(start, stop, dtype=np.int64), shape)
+                tile = self._decode_batched(enc, tpos)
+                self._cache_put(key, _CacheEntry(int(tile.nbytes), tile))
+            else:
+                self.cache_stats.hits += 1
+                info.cache_hits += 1
+                tile = entry.value
+            if out is None:
+                out = np.empty(len(flat), dtype=tile.dtype)
+            mask = tids == tid
+            out[mask] = tile[flat[mask] - int(tid) * t]
+        return out, decoded
+
+    # --------------------------------------------------------------- queries
+    def _decode_batched(self, enc: codecs.Encoded, idx: np.ndarray) -> np.ndarray:
+        """Decode at most ``max_batch`` indices per ``enc.decode_at`` call —
+        EVERY decode (direct, coalesced, tile fill) funnels through here so
+        no path can materialize one giant device batch."""
+        if idx.shape[0] <= self.max_batch:
+            return np.asarray(enc.decode_at(idx))
+        return np.concatenate(
+            [
+                np.asarray(enc.decode_at(idx[s : s + self.max_batch]))
+                for s in range(0, idx.shape[0], self.max_batch)
+            ]
+        )
 
     def _validate(self, name: str, enc: codecs.Encoded,
                   indices: np.ndarray) -> np.ndarray:
@@ -101,25 +313,23 @@ class CodecService:
             raise ValueError(f"indices out of range for shape {shape}")
         return idx
 
-    # ---------------------------------------------------------------- direct
     def decode_at(self, name: str, indices: np.ndarray) -> np.ndarray:
         """Chunked decode so arbitrarily large requests stream through
         fixed-size batches.  Indices are validated up front; stats count
         only work that actually decoded."""
         enc = self._get(name)
         idx = self._validate(name, enc, indices)
-        if idx.shape[0] <= self.max_batch:
-            out, calls = np.asarray(enc.decode_at(idx)), 1
+        sp = self._streams.get(name)
+        if sp is not None and sp.tile_entries:
+            out, calls = self._decode_tiled(name, sp, enc, idx)
         else:
-            parts = [
-                np.asarray(enc.decode_at(idx[s : s + self.max_batch]))
-                for s in range(0, idx.shape[0], self.max_batch)
-            ]
-            out, calls = np.concatenate(parts), len(parts)
+            out = self._decode_batched(enc, idx)
+            calls = -(-idx.shape[0] // self.max_batch) if idx.shape[0] else 1
         info = self._info[name]
         info.requests += 1
         info.entries_decoded += idx.shape[0]
         info.decode_calls += calls
+        self._account_decode_state(name, enc)
         return out
 
     # --------------------------------------------------------------- batched
@@ -128,7 +338,7 @@ class CodecService:
 
         Validates eagerly — a malformed request raises HERE and never
         enters the queue, so it cannot sink the coalesced batch."""
-        idx = self._validate(name, self._get(name), indices)
+        idx = self._validate(name, self._get(name, count=False), indices)
         ticket = self._next_ticket
         self._next_ticket += 1
         self._queue.append((ticket, name, idx))

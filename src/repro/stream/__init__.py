@@ -1,0 +1,48 @@
+"""Out-of-core streaming compression: fit and serve tensors that never
+fit in memory at once.
+
+The paper's scalability claim (§V-D) is that compression time is linear
+in the number of entries — this package removes the remaining obstacle
+to exercising that claim at scale, the fully materialized ``np.ndarray``
+every ``Codec.fit`` call required.  Tensors arrive as ``(indices,
+values)`` slabs from a :class:`SlabSource` (dense array, memory-mapped
+file, or seeded synthetic generator), and ``fit_stream`` drives a
+codec's incremental fitter over them:
+
+    from repro.stream import SyntheticTensorSource, fit_stream
+
+    src = SyntheticTensorSource((4096, 64, 64), slab_entries=1 << 18)
+    enc = fit_stream("nttd", src, rank=6, hidden=12)   # never densifies
+    repro.stream.write_chunked("payload.tcdc", enc)    # chunked container
+
+NTTD warm-starts its minibatched SGD (paper §IV-B Alg. 2) over arriving
+slabs with a reservoir replay buffer; TT gets a TT-ICE-style incremental
+basis expansion (Aksoy et al., PAPERS.md); every other codec falls back
+to accumulate-then-``fit`` via the default ``Codec.fit_stream`` hook.
+Modules: ``source`` (slab protocol + sources), ``fit`` (incremental
+fitters), ``writer`` (chunked container-v3 writer).
+"""
+from repro.stream.fit import NTTDStreamFitter, TTICEStreamFitter, fit_stream
+from repro.stream.source import (
+    DenseSource,
+    MMapTensorSource,
+    Slab,
+    SlabSource,
+    SyntheticTensorSource,
+    write_tensor_file,
+)
+from repro.stream.writer import ChunkedWriter, write_chunked
+
+__all__ = [
+    "ChunkedWriter",
+    "DenseSource",
+    "MMapTensorSource",
+    "NTTDStreamFitter",
+    "Slab",
+    "SlabSource",
+    "SyntheticTensorSource",
+    "TTICEStreamFitter",
+    "fit_stream",
+    "write_chunked",
+    "write_tensor_file",
+]

@@ -1,0 +1,83 @@
+"""Chunked container-v3 writer: append payload bytes as fit progresses.
+
+``ChunkedWriter`` writes the v3 header up front, appends chunks as the
+producer emits them (a finalized TT core, an accumulating fitter's
+partial body, a periodic snapshot), and seals the file with the footer
+chunk index on ``close`` — append-only, no seeking back to patch a
+length field, so a crash leaves a file that is cleanly rejected rather
+than silently half-read.
+
+The concatenated chunks are the codec's ``Encoded.to_bytes()`` body;
+``write_chunked`` is the convenience that splits a finished payload into
+fixed-size chunks, which keeps the serve layer's lazy loader
+(``CodecService.load_stream``) from ever needing one giant read.
+"""
+from __future__ import annotations
+
+import zlib
+
+from repro.codecs import container
+from repro.codecs.base import Encoded
+
+
+class ChunkedWriter:
+    def __init__(self, path: str, codec_name: str):
+        self.path = path
+        self.codec_name = codec_name
+        self._chunks: list[container.ChunkEntry] = []
+        self._f = open(path, "wb")
+        self._offset = self._f.write(container.pack_header(codec_name,
+                                                          container.FLAG_CHUNKED))
+        self._closed = False
+
+    def append(self, chunk: bytes) -> int:
+        """Append one chunk; returns its index in the footer."""
+        if self._closed:
+            raise ValueError(f"{self.path}: writer already closed")
+        if not chunk:
+            raise ValueError("empty chunk")
+        self._f.write(chunk)
+        self._chunks.append(
+            container.ChunkEntry(
+                self._offset, len(chunk), zlib.crc32(chunk) & 0xFFFFFFFF
+            )
+        )
+        self._offset += len(chunk)
+        return len(self._chunks) - 1
+
+    @property
+    def chunks_written(self) -> int:
+        return len(self._chunks)
+
+    def close(self) -> int:
+        """Seal the file with the footer index; returns total file bytes."""
+        if self._closed:
+            return self._offset
+        self._f.write(container.pack_footer(self._chunks))
+        self._offset = self._f.tell()
+        self._f.close()
+        self._closed = True
+        return self._offset
+
+    def __enter__(self) -> "ChunkedWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.close()
+        else:  # don't seal a half-written file as valid
+            self._f.close()
+            self._closed = True
+
+
+def write_chunked(path: str, enc: Encoded, chunk_bytes: int = 1 << 20) -> int:
+    """Write a finished payload as a chunked v3 file; returns file bytes."""
+    if chunk_bytes <= 0:
+        raise ValueError(f"chunk_bytes must be positive, got {chunk_bytes}")
+    body = enc.to_bytes()
+    if not body:
+        raise ValueError("empty payload body")
+    with ChunkedWriter(path, enc.codec_name) as w:
+        for off in range(0, len(body), chunk_bytes):
+            w.append(body[off : off + chunk_bytes])
+        return w.close()

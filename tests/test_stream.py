@@ -1,0 +1,365 @@
+"""repro.stream: slab sources, incremental fitters, the chunked container,
+and lazy serving (CodecService.load_stream + caches)."""
+import numpy as np
+import pytest
+
+from repro import codecs
+from repro.codecs import container, get_codec
+from repro.serve.codec_service import CodecService
+from repro.stream import (
+    ChunkedWriter,
+    DenseSource,
+    MMapTensorSource,
+    SyntheticTensorSource,
+    fit_stream,
+    write_chunked,
+    write_tensor_file,
+)
+
+SHAPE = (16, 12, 10)
+
+
+def _source(slab_entries=300, seed=3):
+    return SyntheticTensorSource(SHAPE, slab_entries=slab_entries, seed=seed)
+
+
+def _materialize(src) -> np.ndarray:
+    x = np.zeros(src.shape, np.float32)
+    for slab in src.iter_slabs():
+        x[tuple(slab.indices[:, k] for k in range(len(src.shape)))] = slab.values
+    return x
+
+
+def _sample_indices(shape, n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.stack([rng.integers(0, s, size=n) for s in shape], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# slab sources
+# ---------------------------------------------------------------------------
+def test_slab_source_deterministic_resumable_cursor():
+    src = _source()
+    a, b = src.slab_at(2), src.slab_at(2)
+    np.testing.assert_array_equal(a.indices, b.indices)
+    np.testing.assert_array_equal(a.values, b.values)
+    # resuming mid-stream sees exactly the tail an uninterrupted run sees
+    tail = [s.cursor for s in src.iter_slabs(start=3)]
+    assert tail == list(range(3, src.n_slabs))
+    with pytest.raises(IndexError, match="cursor"):
+        src.slab_at(src.n_slabs)
+
+
+def test_slab_sources_agree_on_layout(tmp_path):
+    src = _source()
+    x = _materialize(src)
+    dense = DenseSource(x, slab_entries=300)
+    path = str(tmp_path / "t.bin")
+    write_tensor_file(path, x)
+    mm = MMapTensorSource(path, x.shape, np.float32, slab_entries=300)
+    assert dense.n_slabs == mm.n_slabs == src.n_slabs
+    for c in range(src.n_slabs):
+        np.testing.assert_array_equal(dense.slab_at(c).values, src.slab_at(c).values)
+        np.testing.assert_array_equal(mm.slab_at(c).values, src.slab_at(c).values)
+        np.testing.assert_array_equal(mm.slab_at(c).indices, src.slab_at(c).indices)
+
+
+def test_mmap_source_rejects_short_file(tmp_path):
+    path = str(tmp_path / "short.bin")
+    np.zeros(10, np.float32).tofile(path)
+    with pytest.raises(ValueError, match="entries on disk"):
+        MMapTensorSource(path, SHAPE, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# chunked container v3
+# ---------------------------------------------------------------------------
+def _tt_payload():
+    src = _source()
+    x = _materialize(src)
+    return get_codec("ttd").fit(x, max_rank=4)
+
+
+def test_chunked_roundtrip_bit_exact(tmp_path):
+    enc = _tt_payload()
+    path = str(tmp_path / "p.tcdc")
+    import os
+
+    n = write_chunked(path, enc, chunk_bytes=512)
+    assert os.path.getsize(path) == n
+    enc2 = container.load_file(path)
+    assert type(enc2) is type(enc)
+    assert enc2.to_bytes() == enc.to_bytes()  # chunks concatenate to the body
+    np.testing.assert_array_equal(enc.to_dense(), enc2.to_dense())
+    # lazy open sees the same chunks the loader reassembled
+    name, chunks, view = container.open_chunks(path)
+    assert name == "ttd" and len(chunks) > 1
+    assert b"".join(container.read_chunk(view, c) for c in chunks) == enc.to_bytes()
+    view.release()
+
+
+def test_open_chunks_on_monolithic_file(tmp_path):
+    enc = _tt_payload()
+    path = str(tmp_path / "mono.tcdc")
+    container.save_file(path, enc)
+    name, chunks, view = container.open_chunks(path)
+    assert name == "ttd" and len(chunks) == 1
+    assert container.read_chunk(view, chunks[0]) == enc.to_bytes()
+    view.release()
+
+
+@pytest.mark.parametrize("cut", [1, 11, 200])
+def test_chunked_truncated_file_rejected(tmp_path, cut):
+    enc = _tt_payload()
+    path = str(tmp_path / "p.tcdc")
+    write_chunked(path, enc, chunk_bytes=512)
+    with open(path, "rb") as f:
+        blob = f.read()
+    with pytest.raises(ValueError, match="truncated|corrupt"):
+        codecs.load_bytes(blob[:-cut])
+
+
+def test_chunked_corrupt_chunk_rejected(tmp_path):
+    enc = _tt_payload()
+    path = str(tmp_path / "p.tcdc")
+    write_chunked(path, enc, chunk_bytes=512)
+    blob = bytearray(open(path, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF  # flip a bit inside some chunk
+    with pytest.raises(ValueError, match="chunk checksum"):
+        codecs.load_bytes(bytes(blob))
+
+
+def test_chunked_writer_aborted_file_rejected(tmp_path):
+    path = str(tmp_path / "abort.tcdc")
+    try:
+        with ChunkedWriter(path, "ttd") as w:
+            w.append(b"some chunk")
+            raise RuntimeError("producer died")
+    except RuntimeError:
+        pass
+    with pytest.raises(ValueError, match="truncated"):
+        codecs.load_bytes(open(path, "rb").read())
+
+
+def test_chunked_writer_rejects_use_after_close(tmp_path):
+    w = ChunkedWriter(str(tmp_path / "w.tcdc"), "ttd")
+    w.append(b"x")
+    w.close()
+    with pytest.raises(ValueError, match="closed"):
+        w.append(b"y")
+
+
+# ---------------------------------------------------------------------------
+# fit_stream
+# ---------------------------------------------------------------------------
+def test_fallback_accumulate_matches_one_shot_fit():
+    src = _source()
+    x = _materialize(src)
+    enc_stream = fit_stream("tucker", src, 4000)
+    enc_fit = get_codec("tucker").fit(x, 4000)
+    assert codecs.save_bytes(enc_stream) == codecs.save_bytes(enc_fit)
+
+
+def test_nttd_resume_from_cursor_bit_identical():
+    src = _source()
+    opts = dict(rank=3, hidden=6, steps_per_slab=2, batch_size=256, seed=0)
+    full = get_codec("nttd").fit_stream(src, **opts)
+    # same slabs split across two calls sharing one fitter
+    codec = get_codec("nttd")
+    fitter = codec.stream_fitter(src.shape, **opts)
+    codec.fit_stream(src, stop=3, fitter=fitter)
+    resumed = codec.fit_stream(src, start=3, fitter=fitter)
+    assert codecs.save_bytes(resumed) == codecs.save_bytes(full)
+
+
+def test_fit_stream_resume_rejects_new_opts():
+    codec = get_codec("nttd")
+    fitter = codec.stream_fitter(SHAPE, rank=3, hidden=6)
+    with pytest.raises(ValueError, match="resume"):
+        codec.fit_stream(_source(), 4000, fitter=fitter)
+
+
+def test_nttd_budget_translation_matches_fit():
+    codec = get_codec("nttd")
+    fitter = codec.stream_fitter(SHAPE, budget=20000)
+    assert fitter.cfg.rank == codec._rank_for_budget(SHAPE, 20000, {})
+
+
+def test_ttice_streaming_tracks_tt_svd():
+    src = _source(slab_entries=250)  # not a multiple of the 120-entry rows
+    x = _materialize(src)
+    enc = fit_stream("ttd", src, max_rank=6)
+    ref = get_codec("ttd").fit(x, max_rank=6)
+    assert enc.fitness(x) > ref.fitness(x) - 0.05
+    assert max(enc.tt.ranks) <= 6
+
+
+def test_ttice_extra_passes_are_no_ops():
+    src = _source()
+    x = _materialize(src)
+    once = fit_stream("ttd", src, max_rank=6)
+    again = fit_stream("ttd", src, max_rank=6, passes=3)
+    assert codecs.save_bytes(again) == codecs.save_bytes(once)
+    # a partial cursor range re-read must not trip the contiguity check
+    partial = get_codec("ttd").fit_stream(src, max_rank=6, stop=3, passes=2)
+    assert partial.shape == SHAPE
+
+
+def test_ttice_rejects_non_contiguous_slabs():
+    src = _source()
+    fitter = get_codec("ttd").stream_fitter(SHAPE, max_rank=4)
+    slab = src.slab_at(1)  # starts mid-tensor
+    with pytest.raises(ValueError, match="contiguous"):
+        fitter.update(slab.indices, slab.values)
+
+
+def test_nttd_stream_fitness_parity_with_one_shot():
+    """Acceptance: fit_stream within 0.05 of one-shot fit on a RAM-sized
+    control tensor (same rank/lr/seed, matched optimization budgets)."""
+    shape = (32, 24, 16)
+    src = SyntheticTensorSource(shape, slab_entries=2048, seed=5)
+    x = _materialize(src)
+    one_shot = get_codec("nttd").fit(
+        x, rank=4, hidden=8, epochs=10, batch_size=4096, lr=2e-2,
+        init_reorder=False, update_reorder=False, seed=0,
+    )
+    stream = fit_stream(
+        "nttd", src, rank=4, hidden=8, steps_per_slab=4, batch_size=4096,
+        lr=2e-2, passes=10, seed=0,
+    )
+    f_one, f_stream = one_shot.fitness(x), stream.fitness(x)
+    assert f_stream > f_one - 0.05, (f_one, f_stream)
+
+
+# ---------------------------------------------------------------------------
+# serve: lazy load_stream + caches
+# ---------------------------------------------------------------------------
+def test_load_stream_lazy_and_bit_exact(tmp_path):
+    enc = _tt_payload()
+    path = str(tmp_path / "p.tcdc")
+    write_chunked(path, enc, chunk_bytes=512)
+    svc = CodecService()
+    info = svc.load_stream("t", path)
+    assert info.codec == "ttd"
+    assert svc._streams["t"].enc is None  # nothing materialized yet
+    idx = _sample_indices(SHAPE)
+    np.testing.assert_array_equal(svc.decode_at("t", idx), enc.decode_at(idx))
+    assert svc._streams["t"].enc is not None
+    assert svc.cache_stats.misses == 1
+    np.testing.assert_array_equal(svc.decode_at("t", idx), enc.decode_at(idx))
+    assert svc.cache_stats.hits == 1
+    assert info.payload_bytes == enc.payload_bytes()  # refreshed on load
+    assert svc.payloads() == ["t"]
+    svc.unload("t")
+    assert svc.payloads() == []
+
+
+def test_load_stream_rejects_unknown_codec_id(tmp_path):
+    path = str(tmp_path / "bad.tcdc")
+    with ChunkedWriter(path, "nope") as w:  # well-formed file, bogus codec
+        w.append(b"body")
+    svc = CodecService()
+    with pytest.raises(ValueError, match="unknown codec id 'nope'"):
+        svc.load_stream("x", path)
+    assert svc.payloads() == []
+
+
+def test_load_stream_eviction_under_byte_budget(tmp_path):
+    enc = _tt_payload()
+    body = len(enc.to_bytes())
+    paths = []
+    for i in range(2):
+        p = str(tmp_path / f"p{i}.tcdc")
+        write_chunked(p, enc, chunk_bytes=512)
+        paths.append(p)
+    svc = CodecService(cache_bytes=int(body * 1.5))  # room for ONE payload
+    svc.load_stream("a", paths[0])
+    svc.load_stream("b", paths[1])
+    idx = _sample_indices(SHAPE)
+    svc.decode_at("a", idx)
+    assert svc._streams["a"].enc is not None
+    svc.decode_at("b", idx)  # admitting b evicts a (LRU)
+    assert svc._streams["a"].enc is None
+    assert svc._streams["b"].enc is not None
+    assert svc.cache_stats.evictions >= 1
+    # evicted payloads still serve — they just pay rematerialization
+    np.testing.assert_array_equal(svc.decode_at("a", idx), enc.decode_at(idx))
+    assert svc.info("a").cache_misses == 2
+
+
+def test_tiled_decode_cache_hits_and_correctness(tmp_path):
+    enc = _tt_payload()
+    path = str(tmp_path / "p.tcdc")
+    write_chunked(path, enc, chunk_bytes=512)
+    svc = CodecService(cache_bytes=1 << 20)
+    svc.load_stream("t", path, tile_entries=64)
+    idx = _sample_indices(SHAPE, n=100)
+    out = svc.decode_at("t", idx)
+    np.testing.assert_allclose(out, np.asarray(enc.decode_at(idx)), rtol=1e-12)
+    misses = svc.info("t").cache_misses
+    assert misses > 1  # several tiles decoded
+    out2 = svc.decode_at("t", idx)  # identical query: pure cache hits
+    np.testing.assert_array_equal(out, out2)
+    assert svc.info("t").cache_misses == misses
+    assert svc.info("t").cache_hits > 0
+    assert svc.info("t").decode_calls >= misses - 1  # tile decodes counted
+
+
+def test_szlite_dense_cache_bounded_with_counters():
+    src = _source()
+    x = _materialize(src)
+    enc = get_codec("szlite").fit(x, error_bound=0.05)
+    assert enc.cache_nbytes() == 0
+    idx = _sample_indices(SHAPE)
+    enc.decode_at(idx)
+    dense_nbytes = x.size * 8  # decompress reconstructs at float64
+    assert enc.cache_misses == 1 and enc.cache_nbytes() == dense_nbytes
+    enc.decode_at(idx)
+    assert enc.cache_hits == 1
+    enc.drop_caches()
+    assert enc.cache_nbytes() == 0
+    enc.decode_at(idx)
+    assert enc.cache_misses == 2  # rebuilt after eviction
+
+    # under a service byte budget the reconstruction is evicted, not kept
+    svc = CodecService(cache_bytes=100)  # far below x.nbytes
+    svc.load("sz", codecs.save_bytes(enc))
+    sz = svc._payloads["sz"]
+    svc.decode_at("sz", idx)
+    assert sz.cache_nbytes() == 0  # evicted right after accounting
+    assert svc.cache_stats.evictions >= 1
+    assert svc.info("sz").cache_misses >= 1
+    # an unbounded service keeps it warm and mirrors the hit counters
+    svc2 = CodecService()
+    svc2.load("sz", sz)
+    svc2.decode_at("sz", idx)
+    svc2.decode_at("sz", idx)
+    assert svc2.info("sz").cache_hits >= 1
+    assert sz.cache_nbytes() == dense_nbytes
+
+
+# ---------------------------------------------------------------------------
+# acceptance: out-of-core end to end at 2^24 entries
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_stream_end_to_end_2e24(tmp_path):
+    shape = (4096, 64, 64)  # 2^24 entries, never materialized
+    src = SyntheticTensorSource(shape, slab_entries=1 << 18, seed=1)
+    dense_nbytes = src.n_entries * 4
+    assert src.slab_nbytes * 8 <= dense_nbytes  # resident slab <= 1/8 dense
+    enc = fit_stream(
+        "nttd", src, rank=6, hidden=12, steps_per_slab=6, batch_size=8192,
+        lr=2e-2, seed=0,
+    )
+    assert enc.shape == shape
+    path = str(tmp_path / "big.tcdc")
+    write_chunked(path, enc, chunk_bytes=1 << 14)
+    svc = CodecService()
+    svc.load_stream("big", path)
+    idx = _sample_indices(shape, n=512, seed=7)
+    served = svc.decode_at("big", idx)
+    np.testing.assert_array_equal(served, np.asarray(enc.decode_at(idx)))
+    # the fit learned signal, not noise: decoded entries correlate with truth
+    truth = src.values_at(idx)
+    corr = float(np.corrcoef(truth, served)[0, 1])
+    assert corr > 0.5, corr
