@@ -9,6 +9,7 @@ import numpy as np
 
 from benchmarks.common import FULL, emit, save_rows
 from repro.codecs import get_codec
+from repro.codecs.indexing import flat_to_multi
 from repro.core import nttd
 from repro.core.folding import make_folding_spec
 from repro.data import synthetic_tensors as st
@@ -23,7 +24,7 @@ def _folded_ttsvd_fitness(x: np.ndarray, budget_bytes: int) -> float:
     folded = np.zeros(spec.folded_shape, dtype=np.float32)
     n = x.size
     flat = np.arange(n)
-    idx = nttd.flat_to_multi(flat, x.shape)
+    idx = flat_to_multi(flat, x.shape)
     fidx = np.asarray(spec.fold_indices(idx))
     folded[tuple(fidx[:, j] for j in range(spec.d_prime))] = x.reshape(-1)
     t = get_codec("ttd").fit(folded, budget_bytes)

@@ -116,7 +116,9 @@ def run_stream(smoke: bool = False) -> None:
         # round-trip the payload through the chunked container + lazy serve
         path = os.path.join(RESULTS_DIR, "fig5_stream_payload.tcdc")
         os.makedirs(RESULTS_DIR, exist_ok=True)
-        write_chunked(path, enc, chunk_bytes=1 << 16)
+        # small chunks so the checked-in payload has a multi-chunk index
+        # (with entry ranges) for the fleet smoke to shard over
+        write_chunked(path, enc, chunk_bytes=2048)
         svc = CodecService()
         svc.load_stream("stream", path)
         rng = np.random.default_rng(0)

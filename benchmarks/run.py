@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.fig9_speed",
     "benchmarks.kernels_bench",
     "benchmarks.lm_steps",
+    "benchmarks.fleet_bench",
 ]
 
 

@@ -49,3 +49,11 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
 python -m benchmarks.fig5_compress_scaling --stream --smoke
 test -s benchmarks/results/BENCH_stream.json
 echo "streaming smoke OK: $(tr -d '\n' < benchmarks/results/BENCH_stream.json | head -c 200)"
+
+# Fleet smoke: a 3-instance fleet over the checked-in chunked payload —
+# every batch verified bit-identical against a single resident
+# CodecService, plus a live 3->2 rebalance mid-query-stream with zero
+# failed tickets.  BENCH_fleet.json tracks throughput/p99/hit rates.
+python -m benchmarks.fleet_bench --smoke
+test -s benchmarks/results/BENCH_fleet.json
+echo "fleet smoke OK: $(tr -d '\n' < benchmarks/results/BENCH_fleet.json | head -c 200)"

@@ -42,6 +42,7 @@ from repro.codecs.base import Encoded, get_codec
 MAGIC = b"TCDC"
 VERSION = 3
 FOOTER_MAGIC = b"TCDX"
+RANGES_MAGIC = b"TCDR"  # optional per-chunk entry-range block in the footer
 FLAG_CHUNKED = 0x01
 _LEGACY_NTTD_VERSION = 2
 _TRAILER_LEN = 12  # u64 footer_len + FOOTER_MAGIC
@@ -113,6 +114,13 @@ class ChunkEntry:
     offset: int  # absolute file offset of the chunk's first byte
     length: int
     crc: int
+    #: optional flat-entry range [entry_start, entry_stop) this chunk is
+    #: responsible for — a ROUTING partition of the tensor's flat index
+    #: space (recorded by the stream writer), not a decode dependency:
+    #: the fleet router uses it to assign queries to chunk owners, while
+    #: decoding still concatenates all chunks into the payload body.
+    entry_start: int | None = None
+    entry_stop: int | None = None
 
 
 def pack_header(codec_name: str, flags: int = 0) -> bytes:
@@ -126,6 +134,11 @@ def pack_footer(chunks: list[ChunkEntry]) -> bytes:
     footer = struct.pack("<I", len(chunks)) + b"".join(
         struct.pack("<QQI", c.offset, c.length, c.crc) for c in chunks
     )
+    # entry ranges are all-or-nothing: a partial mapping cannot route
+    if chunks and all(c.entry_start is not None for c in chunks):
+        footer += RANGES_MAGIC + b"".join(
+            struct.pack("<QQ", c.entry_start, c.entry_stop) for c in chunks
+        )
     return footer + struct.pack("<Q", len(footer)) + FOOTER_MAGIC
 
 
@@ -153,14 +166,22 @@ def _parse_chunk_index(data, header_end: int) -> list[ChunkEntry]:
     if len(footer) < 4:
         raise ValueError("truncated payload: chunk index")
     (n,) = struct.unpack("<I", footer[:4])
-    if len(footer) != 4 + 20 * n:
+    base_len = 4 + 20 * n
+    ranges: list[tuple[int, int]] | None = None
+    if len(footer) == base_len + 4 + 16 * n and footer[base_len : base_len + 4] == RANGES_MAGIC:
+        ranges = [
+            struct.unpack("<QQ", footer[base_len + 4 + 16 * i : base_len + 20 + 16 * i])
+            for i in range(n)
+        ]
+    elif len(footer) != base_len:
         raise ValueError("corrupt payload: chunk index length mismatch")
     chunks = []
     for i in range(n):
         off, length, crc = struct.unpack("<QQI", footer[4 + 20 * i : 24 + 20 * i])
         if off < header_end or off + length > footer_start:
             raise ValueError("corrupt payload: chunk outside data region")
-        chunks.append(ChunkEntry(off, length, crc))
+        start, stop = ranges[i] if ranges is not None else (None, None)
+        chunks.append(ChunkEntry(off, length, crc, start, stop))
     return chunks
 
 
@@ -259,3 +280,19 @@ def open_chunks(path: str) -> tuple[str, list[ChunkEntry], memoryview]:
             raise ValueError("truncated payload: body")
         chunks = [ChunkEntry(off + 12, body_len, crc)]
     return name, chunks, view
+
+
+def chunk_index(path: str) -> tuple[str, list[ChunkEntry]]:
+    """Parse a v3 file's header + chunk index WITHOUT keeping it open.
+
+    The fleet router builds its consistent-hash ring over exactly these
+    entries (one key per chunk; entry ranges, when recorded, tell it which
+    flat indices each chunk routes).  Unlike :func:`open_chunks` no mmap
+    outlives the call — the ring only needs the index, never chunk bytes.
+    """
+    name, chunks, view = open_chunks(path)
+    mm = view.obj
+    view.release()
+    if hasattr(mm, "close"):
+        mm.close()
+    return name, chunks

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import nttd, reorder
+from repro.codecs.indexing import flat_to_multi
 from repro.core.folding import FoldingSpec, make_folding_spec
 from repro.optim import optimizers
 
@@ -230,7 +231,7 @@ def compress(
             flat = rng.permutation(n_entries)[: steps * bsz]
         else:
             flat = rng.integers(0, n_entries, size=steps * bsz)
-        return nttd.flat_to_multi(flat, x.shape)  # [steps*bsz, d]
+        return flat_to_multi(flat, x.shape)  # [steps*bsz, d]
 
     def values_at(pos: np.ndarray) -> np.ndarray:
         orig = np.empty_like(pos)
@@ -250,7 +251,7 @@ def compress(
         err2 = 0.0
         norm2 = 0.0
         for s in range(0, eval_n, config.eval_batch):
-            pos = nttd.flat_to_multi(flat[s : s + config.eval_batch], x.shape)
+            pos = flat_to_multi(flat[s : s + config.eval_batch], x.shape)
             truth = values_at(pos).astype(np.float64)
             pad = config.eval_batch - pos.shape[0]
             if pad:

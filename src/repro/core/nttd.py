@@ -125,11 +125,9 @@ def make_predict(spec: FoldingSpec, cfg: NTTDConfig):
     return predict
 
 
-def flat_to_multi(flat: np.ndarray, shape: tuple[int, ...]) -> np.ndarray:
-    """Row-major flat index [N] -> multi-index [N, d] (numpy)."""
-    dims = np.array(shape, dtype=np.int64)
-    radix = np.concatenate([np.cumprod(dims[::-1])[::-1][1:], [1]])
-    return (flat[:, None] // radix) % dims
+# canonical home is repro.codecs.indexing; re-exported here for the many
+# historical call sites (and external users) that import it from nttd
+from repro.codecs.indexing import flat_to_multi  # noqa: E402, F401
 
 
 def generate_tensor(

@@ -1,0 +1,46 @@
+"""Multi-pod serving of chunked codec payloads.
+
+The paper's serving story — any entry reconstructible in logarithmic
+time — makes compressed payloads directly servable, but one
+``CodecService`` is bounded by one machine's RAM and one process's
+decode throughput.  ``repro.fleet`` runs N instances as a single
+logical service:
+
+    from repro.fleet import FleetFrontend, rebalance, collect
+
+    fleet = FleetFrontend(4, cache_bytes=1 << 24, replication=1)
+    fleet.load_stream("embed", "embed.tcdc", tile_entries=4096)
+    fleet.decode_at("embed", idx)       # bit-identical to one instance
+
+    rebalance(fleet, remove=["i3"])     # drain -> move chunks -> evict
+    collect(fleet).as_dict()            # fleet-wide cache + latency roll-up
+
+Every instance mmaps the same container-v3 file; a consistent-hash ring
+(``router``) over the file's chunk index entries decides which instances
+own a payload — only owners materialize its body — and, when
+``tile_entries`` is set, which instance caches which decode tiles, so
+resident cache bytes shard across the fleet (with a configurable
+replication factor for hot chunks).  The frontend splits each query
+batch by owner, fans out through
+the per-instance ``submit``/``flush`` coalescing path under an in-flight
+byte budget (backpressure, not unbounded queues), and reassembles
+results in request order.  ``rebalance`` changes ring membership behind
+a drain barrier so zero in-flight tickets are lost, with a warm tile
+handoff so scale-up does not start from a cold cache.
+"""
+from repro.fleet.frontend import FleetFrontend
+from repro.fleet.metrics import CacheCounters, FleetMetrics, InstanceMetrics, collect
+from repro.fleet.rebalance import RebalanceReport, rebalance
+from repro.fleet.router import HashRing, PayloadRoute
+
+__all__ = [
+    "CacheCounters",
+    "FleetFrontend",
+    "FleetMetrics",
+    "HashRing",
+    "InstanceMetrics",
+    "PayloadRoute",
+    "RebalanceReport",
+    "collect",
+    "rebalance",
+]

@@ -1,0 +1,362 @@
+"""The fleet query frontend: N ``CodecService`` instances, one service.
+
+Every instance mmaps the same container-v3 file (``load_stream``) but —
+via the :class:`~repro.serve.codec_service.Ownership` filter the router
+installs — materializes and caches only its shard of chunks and decode
+tiles.  A ``decode_at`` batch is split by owner, fanned out through each
+instance's existing ``submit``/``flush`` coalescing path, and reassembled
+in request order, so a fleet answer is bit-identical to a single
+resident instance's.
+
+Admission control: ``max_inflight_bytes`` bounds the bytes (decoded
+output + index payload) queued on any one instance during a flush.  When
+a wave of sub-batches would exceed it, the instance is flushed NOW
+(backpressure) instead of queueing without bound —
+``backpressure_flushes`` counts how often that happened.
+
+Replication: with ``replication=R`` each chunk/tile key has R owners on
+the ring; the frontend sends each group to whichever replica has the
+least bytes planned this flush, so hot chunks spread across their
+replica set.
+
+    fleet = FleetFrontend(4, cache_bytes=1 << 24, replication=1)
+    fleet.load_stream("embed", "embed.tcdc", tile_entries=4096)
+    fleet.decode_at("embed", idx)        # == single instance, bit-exact
+"""
+from __future__ import annotations
+
+import collections
+import time
+
+import numpy as np
+
+from repro.codecs import container
+from repro.codecs.indexing import validate_indices
+from repro.fleet.router import HashRing, PayloadRoute
+from repro.serve.codec_service import CodecService, Ownership
+
+#: fp64 output per decoded entry — the unit admission control budgets in
+_OUT_BYTES_PER_ENTRY = 8
+
+
+class FleetFrontend:
+    def __init__(
+        self,
+        instances: int | list[str] | dict[str, CodecService] = 2,
+        *,
+        cache_bytes: int | None = None,
+        max_batch: int = 65536,
+        replication: int = 1,
+        vnodes: int = 64,
+        max_inflight_bytes: int | None = None,
+        latency_window: int = 2048,
+    ):
+        if isinstance(instances, int):
+            if instances < 1:
+                raise ValueError(f"need >= 1 instance, got {instances}")
+            instances = [f"i{k}" for k in range(instances)]
+        self._cache_bytes = cache_bytes
+        self._max_batch = max_batch
+        self.max_inflight_bytes = max_inflight_bytes
+        self._latency_window = latency_window
+        if isinstance(instances, dict):
+            self.services: dict[str, CodecService] = dict(instances)
+        else:
+            self.services = {
+                iid: CodecService(max_batch=max_batch, cache_bytes=cache_bytes)
+                for iid in instances
+            }
+        self.ring = HashRing(
+            list(self.services), vnodes=vnodes, replication=replication
+        )
+        self.routes: dict[str, PayloadRoute] = {}
+        self._paths: dict[str, tuple[str, int | None]] = {}
+        #: payload -> group id -> replica list, rebuilt by apply_ownership
+        self._group_owners: dict[str, dict[int, list[str]]] = {}
+        self._queue: list[tuple[int, str, np.ndarray]] = []
+        self._next_ticket = 0
+        #: results resolved by drain()/decode_at(), delivered by the next flush()
+        self._drained: dict[int, np.ndarray] = {}
+        #: failures resolved early (drain(), decode_at()), reported by the
+        #: next flush() — the failure analogue of _drained
+        self._pending_failed: dict[int, Exception] = {}
+        #: fleet tickets whose decode failed during the LAST flush
+        self.failed: dict[int, Exception] = {}
+        self.backpressure_flushes = 0
+        self._latency: dict[str, collections.deque] = {
+            iid: collections.deque(maxlen=latency_window) for iid in self.services
+        }
+        #: monotonic per-instance flush counter (the latency deque is
+        #: window-capped, so len() is not a flush count)
+        self._flush_counts: dict[str, int] = {iid: 0 for iid in self.services}
+        self._peak_inflight: dict[str, int] = {iid: 0 for iid in self.services}
+
+    # ------------------------------------------------------------------ admin
+    def instances(self) -> list[str]:
+        return sorted(self.services)
+
+    def payloads(self) -> list[str]:
+        return sorted(self.routes)
+
+    def path_of(self, name: str) -> tuple[str, int | None]:
+        """(container path, tile_entries) a payload was loaded with — what
+        the rebalancer replays onto a joining instance."""
+        return self._paths[name]
+
+    def spawn_instance(self, iid: str) -> CodecService:
+        """Build a service with this fleet's config and load every
+        registered payload on it.  Ring membership and ownership are NOT
+        touched — that is the rebalancer's job (drain barrier first)."""
+        if iid in self.services:
+            raise ValueError(f"instance {iid!r} already exists")
+        svc = CodecService(max_batch=self._max_batch,
+                           cache_bytes=self._cache_bytes)
+        for name, (path, tile_entries) in self._paths.items():
+            svc.load_stream(name, path, tile_entries=tile_entries)
+        self.services[iid] = svc
+        self._latency[iid] = collections.deque(maxlen=self._latency_window)
+        self._flush_counts[iid] = 0
+        self._peak_inflight[iid] = 0
+        return svc
+
+    def retire_instance(self, iid: str) -> CodecService:
+        """Detach a service from the fleet (payloads unloaded, mmaps
+        released).  Ring membership must already have been updated and
+        in-flight work drained — the rebalancer sequences this."""
+        svc = self.services.pop(iid)
+        self._latency.pop(iid, None)
+        self._flush_counts.pop(iid, None)
+        self._peak_inflight.pop(iid, None)
+        for name in list(svc.payloads()):
+            svc.unload(name)
+        return svc
+
+    def latency_seconds(self, iid: str) -> list[float]:
+        """Wall seconds of this instance's most recent flushes (window-
+        capped at ``latency_window``; see ``flush_count`` for the total)."""
+        return list(self._latency[iid])
+
+    def flush_count(self, iid: str) -> int:
+        return self._flush_counts[iid]
+
+    def peak_inflight_bytes(self, iid: str) -> int:
+        return self._peak_inflight[iid]
+
+    # ------------------------------------------------------------------ load
+    def load_stream(
+        self, name: str, path: str, *, tile_entries: int | None = None
+    ) -> PayloadRoute:
+        """Register a container-v3 file fleet-wide: every instance mmaps
+        it lazily; the chunk index seeds the routing table; ownership
+        filters shard materialization and tile caching across the ring."""
+        codec_name, chunks = container.chunk_index(path)
+        try:
+            for svc in self.services.values():
+                svc.load_stream(name, path, tile_entries=tile_entries)
+            # the chunk-0 primary is an owner either way — peeking the shape
+            # there materializes a body that instance would keep anyway
+            primary = self.ring.owner(f"{name}/c0")
+            shape = self.services[primary].shape_of(name)
+            route = PayloadRoute(name, shape, chunks, tile_entries)
+        except Exception:
+            # nothing half-registered: a corrupt chunk discovered at the
+            # shape peek must not leave N-1 instances serving garbage —
+            # and a failed RE-load must not keep the replaced payload's
+            # stale route/path either (the instances' registrations are
+            # already gone)
+            for svc in self.services.values():
+                svc.unload(name)
+            self.routes.pop(name, None)
+            self._paths.pop(name, None)
+            raise
+        self.routes[name] = route
+        self._paths[name] = (path, tile_entries)
+        self.apply_ownership(name)
+        return route
+
+    def unload(self, name: str) -> None:
+        self.routes.pop(name, None)
+        self._paths.pop(name, None)
+        self._group_owners.pop(name, None)
+        for svc in self.services.values():
+            svc.unload(name)
+
+    def apply_ownership(self, name: str) -> None:
+        """(Re-)install each instance's ownership filter for a payload
+        from the CURRENT ring — called at load and after every rebalance.
+        One ring enumeration serves all instances; a service not on the
+        ring (a leaver awaiting retirement) owns nothing."""
+        route = self.routes[name]
+        maps = route.owner_maps(self.ring)
+        chunk_tbl, tile_tbl = route.ownership_tables(self.ring, maps)
+        for iid, svc in self.services.items():
+            svc.set_ownership(
+                name,
+                Ownership(
+                    chunk_ids=chunk_tbl.get(iid, frozenset()),
+                    tile_ids=(
+                        tile_tbl.get(iid, frozenset()) if route.tiled else None
+                    ),
+                ),
+            )
+        # hot-path routing table: group id -> replica list (primary first),
+        # so flush() pays a dict lookup per group, not a ring hash
+        self._group_owners[name] = maps[1] if route.tiled else maps[0]
+
+    # ---------------------------------------------------------------- queries
+    def _validate(self, name: str, indices: np.ndarray) -> np.ndarray:
+        """Same validation as CodecService (shared helper), so a malformed
+        request is rejected before any fan-out."""
+        route = self.routes.get(name)
+        if route is None:
+            raise KeyError(
+                f"no payload {name!r}; loaded: {', '.join(self.payloads())}"
+            )
+        return validate_indices(name, route.shape, indices)
+
+    def submit(self, name: str, indices: np.ndarray) -> int:
+        """Queue a request; resolved by the next flush().  Validates
+        eagerly so a malformed request can never poison a batch."""
+        idx = self._validate(name, indices)
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((ticket, name, idx))
+        return ticket
+
+    def decode_at(self, name: str, indices: np.ndarray) -> np.ndarray:
+        """Direct query: split by owner, fan out, reassemble in order.
+        Any other queued tickets are resolved too — their results are
+        held for the next flush(), and their failures (if any) stay in
+        ``self.failed`` until then, mirroring CodecService semantics."""
+        ticket = self.submit(name, indices)
+        results = self.flush()
+        value = results.pop(ticket, None)
+        self._drained.update(results)  # don't lose concurrent tickets...
+        err = self.failed.pop(ticket, None)
+        # ...and defer their failures to the next flush — the one report,
+        # not one now and one again later
+        self._pending_failed.update(self.failed)
+        self.failed = {}
+        if err is not None:
+            raise err
+        return value
+
+    def drain(self) -> None:
+        """Barrier: resolve every queued ticket.  Results are merged into
+        the next flush()'s return and failures accumulate, so a rebalance
+        mid-query-stream loses nothing."""
+        if not self._queue:
+            return
+        results = self.flush()
+        self._drained.update(results)
+        self._pending_failed.update(self.failed)
+
+    # ----------------------------------------------------------------- flush
+    def flush(self) -> dict[int, np.ndarray]:
+        """Resolve all queued tickets: one owner-split plan, one
+        coalesced submit/flush round per instance (admission-controlled),
+        then per-ticket reassembly in request order."""
+        # failures resolved early (drain/decode_at) are reported exactly
+        # once, by this flush — mirroring how _drained delivers results
+        self.failed = self._pending_failed
+        self._pending_failed = {}
+        results = self._drained
+        self._drained = {}
+        queue, self._queue = self._queue, []
+        # plan: per instance, (ticket, name, sub-indices, output positions)
+        plan: dict[str, list[tuple[int, str, np.ndarray, np.ndarray]]] = {
+            iid: [] for iid in self.services
+        }
+        planned_bytes = dict.fromkeys(self.services, 0)
+        for ticket, name, idx in queue:
+            route = self.routes.get(name)
+            if route is None:  # unloaded between submit and flush
+                self.failed[ticket] = KeyError(f"payload {name!r} unloaded")
+                continue
+            if not idx.shape[0]:  # empty request: answer locally
+                results[ticket] = np.empty(0, dtype=np.float64)
+                continue
+            gids = route.group_of(route.flat(idx))
+            uniq, inv = np.unique(gids, return_inverse=True)
+            counts = np.bincount(inv, minlength=len(uniq))
+            group_owners = self._group_owners[name]
+            owner_by_gid = np.empty(len(uniq), dtype=object)
+            for k, gid in enumerate(uniq):
+                replicas = group_owners[int(gid)]
+                # ties go to the first (primary) replica — min() keeps
+                # the earliest element among equals
+                owner_by_gid[k] = min(replicas, key=planned_bytes.__getitem__)
+                planned_bytes[owner_by_gid[k]] += (
+                    int(counts[k]) * _OUT_BYTES_PER_ENTRY
+                )
+            owners = owner_by_gid[inv]
+            for iid in np.unique(owners):
+                pos = np.nonzero(owners == iid)[0]
+                plan[iid].append((ticket, name, idx[pos], pos))
+        # execute
+        parts: dict[int, list[tuple[np.ndarray, np.ndarray]]] = {}
+        part_failed: dict[int, Exception] = {}
+        for iid, items in plan.items():
+            if items:
+                self._run_instance(iid, items, parts, part_failed)
+        # reassemble in request order
+        sizes = {ticket: idx.shape[0] for ticket, _, idx in queue}
+        for ticket, _, idx in queue:
+            if ticket in results or ticket in self.failed:
+                continue  # empty request / failed before fan-out
+            if ticket in part_failed:
+                self.failed[ticket] = part_failed[ticket]
+                continue
+            got = parts.get(ticket, [])
+            out = np.empty(sizes[ticket], dtype=got[0][1].dtype)
+            for pos, values in got:
+                out[pos] = values
+            results[ticket] = out
+        return results
+
+    def _run_instance(
+        self,
+        iid: str,
+        items: list[tuple[int, str, np.ndarray, np.ndarray]],
+        parts: dict[int, list[tuple[np.ndarray, np.ndarray]]],
+        part_failed: dict[int, Exception],
+    ) -> None:
+        """Submit this instance's sub-batches through its coalescing path,
+        flushing early whenever the in-flight byte budget would overflow."""
+        svc = self.services[iid]
+        pending: list[tuple[int, int, np.ndarray]] = []  # (ticket, svc ticket, pos)
+        inflight = 0
+        for ticket, name, sub_idx, pos in items:
+            cost = sub_idx.shape[0] * _OUT_BYTES_PER_ENTRY + sub_idx.nbytes
+            if (
+                self.max_inflight_bytes is not None
+                and pending
+                and inflight + cost > self.max_inflight_bytes
+            ):
+                self.backpressure_flushes += 1
+                self._flush_instance(iid, svc, pending, parts, part_failed)
+                pending, inflight = [], 0
+            try:
+                svc_ticket = svc.submit(name, sub_idx)
+            except Exception as e:  # noqa: BLE001 — isolate this part
+                part_failed[ticket] = e
+                continue
+            pending.append((ticket, svc_ticket, pos))
+            inflight += cost
+            self._peak_inflight[iid] = max(self._peak_inflight[iid], inflight)
+        if pending:
+            self._flush_instance(iid, svc, pending, parts, part_failed)
+
+    def _flush_instance(self, iid, svc, pending, parts, part_failed) -> None:
+        t0 = time.perf_counter()
+        out = svc.flush()
+        self._latency[iid].append(time.perf_counter() - t0)
+        self._flush_counts[iid] += 1
+        for ticket, svc_ticket, pos in pending:
+            if svc_ticket in out:
+                parts.setdefault(ticket, []).append((pos, out[svc_ticket]))
+            else:
+                part_failed[ticket] = svc.failed.get(
+                    svc_ticket,
+                    RuntimeError(f"instance {iid}: ticket vanished"),
+                )

@@ -1,0 +1,122 @@
+"""Fleet-wide observability: roll up per-instance cache stats + latency.
+
+``collect`` snapshots every instance's ``cache_stats`` (hits / misses /
+evictions / resident bytes, with the per-payload breakdown the serve
+layer now keeps), the admission-control gauges, and p50/p99 decode
+latency from the frontend's per-instance flush timings, then totals
+them fleet-wide.  ``as_dict`` renders the snapshot JSON-able — the shape
+``benchmarks/fleet_bench.py`` writes into ``BENCH_fleet.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.fleet.frontend import FleetFrontend
+from repro.serve.codec_service import PayloadCacheStats
+
+
+@dataclasses.dataclass
+class CacheCounters(PayloadCacheStats):
+    """The serve layer's four cache counters plus roll-up helpers."""
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def add(self, other) -> None:
+        self.hits += other.hits
+        self.misses += other.misses
+        self.evictions += other.evictions
+        self.resident_bytes += other.resident_bytes
+
+    @classmethod
+    def of(cls, counters) -> "CacheCounters":
+        return cls(counters.hits, counters.misses, counters.evictions,
+                   counters.resident_bytes)
+
+
+@dataclasses.dataclass
+class InstanceMetrics:
+    instance: str
+    cache: CacheCounters
+    per_payload: dict[str, CacheCounters]
+    peak_inflight_bytes: int
+    decode_p50_ms: float | None
+    decode_p99_ms: float | None
+    flushes: int  # monotonic; latency percentiles cover the recent window
+
+
+@dataclasses.dataclass
+class FleetMetrics:
+    instances: dict[str, InstanceMetrics]
+    fleet: CacheCounters            # totals across instances
+    per_payload: dict[str, CacheCounters]  # fleet totals by payload
+    backpressure_flushes: int
+
+    def as_dict(self) -> dict:
+        def counters(c: CacheCounters) -> dict:
+            return {
+                "hits": c.hits, "misses": c.misses, "evictions": c.evictions,
+                "resident_bytes": c.resident_bytes,
+                "hit_rate": round(c.hit_rate, 4),
+            }
+
+        return {
+            "fleet": counters(self.fleet),
+            "per_payload": {k: counters(v) for k, v in self.per_payload.items()},
+            "backpressure_flushes": self.backpressure_flushes,
+            "instances": {
+                iid: {
+                    "cache": counters(m.cache),
+                    "per_payload": {
+                        k: counters(v) for k, v in m.per_payload.items()
+                    },
+                    "peak_inflight_bytes": m.peak_inflight_bytes,
+                    "decode_p50_ms": m.decode_p50_ms,
+                    "decode_p99_ms": m.decode_p99_ms,
+                    "flushes": m.flushes,
+                }
+                for iid, m in self.instances.items()
+            },
+        }
+
+
+def _percentile_ms(samples: list[float], q: float) -> float | None:
+    if not samples:
+        return None
+    return round(float(np.percentile(np.asarray(samples), q)) * 1e3, 4)
+
+
+def collect(fleet: FleetFrontend) -> FleetMetrics:
+    instances: dict[str, InstanceMetrics] = {}
+    fleet_total = CacheCounters()
+    fleet_per_payload: dict[str, CacheCounters] = {}
+    for iid in fleet.instances():
+        svc = fleet.services[iid]
+        stats = svc.cache_stats
+        cache = CacheCounters.of(stats)
+        per_payload = {
+            name: CacheCounters.of(p) for name, p in stats.per_payload.items()
+        }
+        lat = fleet.latency_seconds(iid)
+        instances[iid] = InstanceMetrics(
+            instance=iid,
+            cache=cache,
+            per_payload=per_payload,
+            peak_inflight_bytes=fleet.peak_inflight_bytes(iid),
+            decode_p50_ms=_percentile_ms(lat, 50),
+            decode_p99_ms=_percentile_ms(lat, 99),
+            flushes=fleet.flush_count(iid),
+        )
+        fleet_total.add(cache)
+        for name, c in per_payload.items():
+            fleet_per_payload.setdefault(name, CacheCounters()).add(c)
+    return FleetMetrics(
+        instances=instances,
+        fleet=fleet_total,
+        per_payload=fleet_per_payload,
+        backpressure_flushes=fleet.backpressure_flushes,
+    )

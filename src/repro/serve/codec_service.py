@@ -50,7 +50,7 @@ import numpy as np
 
 from repro import codecs
 from repro.codecs import container
-from repro.core.nttd import flat_to_multi
+from repro.codecs.indexing import flat_to_multi, multi_to_flat, validate_indices
 
 
 @dataclasses.dataclass
@@ -65,11 +65,75 @@ class PayloadInfo:
 
 
 @dataclasses.dataclass
+class PayloadCacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    resident_bytes: int = 0
+
+
+@dataclasses.dataclass
 class CacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
     resident_bytes: int = 0
+    #: same four counters broken down by payload name — the fleet metrics
+    #: roll-up consumes this to show where an instance's budget goes
+    per_payload: dict[str, PayloadCacheStats] = dataclasses.field(
+        default_factory=dict
+    )
+
+    def for_payload(self, name: str) -> PayloadCacheStats:
+        return self.per_payload.setdefault(name, PayloadCacheStats())
+
+    def hit(self, name: str) -> None:
+        self.hits += 1
+        self.for_payload(name).hits += 1
+
+    def miss(self, name: str) -> None:
+        self.misses += 1
+        self.for_payload(name).misses += 1
+
+
+class NotOwnedError(KeyError):
+    """Raised when a query lands on an instance whose ownership filter
+    excludes the whole payload — the fleet frontend routes so this never
+    fires after a drain barrier; seeing it means a routing bug, not a
+    corrupt payload."""
+
+
+@dataclasses.dataclass
+class Ownership:
+    """An instance's shard of one payload, installed by the fleet router.
+
+    ``chunk_ids`` filters the chunk-materialization path: an instance
+    owning NO chunk of a payload refuses to materialize it (so payload
+    bodies only become resident on their owners).  ``tile_ids`` filters
+    the decode-tile cache: unowned tiles are still decodable (decode-
+    through, keeps mid-rebalance queries correct) but are never cached,
+    so each instance's resident tile bytes stay its shard of the whole.
+    Both are precomputed sets (the router enumerates the ring once per
+    ownership epoch), so the hot decode path pays set lookups, not ring
+    hashes.
+    """
+
+    chunk_ids: frozenset[int] | None = None  # None = owns every chunk
+    tile_ids: frozenset[int] | None = None  # None = owns every tile
+
+    def owns_chunk(self, i: int) -> bool:
+        return self.chunk_ids is None or i in self.chunk_ids
+
+    def owns_tile(self, tid: int) -> bool:
+        return self.tile_ids is None or tid in self.tile_ids
+
+    def owns_payload(self) -> bool:
+        """May this instance materialize the payload body at all?  True
+        when it owns any chunk, or serves a non-empty tile shard (tile
+        decode needs the body even when every chunk hashed elsewhere)."""
+        if self.chunk_ids is None or self.chunk_ids:
+            return True
+        return bool(self.tile_ids)
 
 
 @dataclasses.dataclass
@@ -88,6 +152,7 @@ class _StreamPayload:
     tile_entries: int | None
     body_nbytes: int
     enc: codecs.Encoded | None = None
+    ownership: Ownership | None = None
 
 
 class CodecService:
@@ -161,6 +226,16 @@ class CodecService:
     def info(self, name: str) -> PayloadInfo:
         return self._info[name]
 
+    def shape_of(self, name: str) -> tuple[int, ...]:
+        """Original-tensor shape of a payload.  Lazy payloads are
+        materialized to read it (the fleet loader calls this exactly once,
+        on the chunk-0 primary owner — an instance that keeps the body);
+        the materialized body joins the LRU ledger just like a decode's
+        would, so it stays accounted and evictable."""
+        enc = self._get(name, count=False)
+        self._account_decode_state(name, enc)
+        return tuple(int(s) for s in enc.shape)
+
     def _get(self, name: str, count: bool = True) -> codecs.Encoded:
         """Resolve a payload, materializing lazy ones.  ``count=False``
         (validation-only paths like submit) skips the hit counter so one
@@ -174,15 +249,76 @@ class CodecService:
                 f"no payload {name!r}; loaded: {', '.join(self.payloads())}"
             )
         if sp.enc is None:
-            self.cache_stats.misses += 1
+            if sp.ownership is not None and not sp.ownership.owns_payload():
+                raise NotOwnedError(
+                    f"payload {name!r} is not owned by this instance "
+                    "(ownership filter excludes every chunk)"
+                )
+            self.cache_stats.miss(name)
             self._info[name].cache_misses += 1
             body = b"".join(container.read_chunk(sp.view, c) for c in sp.chunks)
             sp.enc = codecs.get_codec(sp.codec).encoded_cls.from_bytes(body)
             self._info[name].payload_bytes = sp.enc.payload_bytes()
         elif count:
-            self.cache_stats.hits += 1
+            self.cache_stats.hit(name)
             self._info[name].cache_hits += 1
         return sp.enc
+
+    # ------------------------------------------------------------- ownership
+    def set_ownership(self, name: str, ownership: Ownership | None) -> None:
+        """Install (or clear, with ``None``) the fleet ownership filter on
+        a lazy payload's chunk-materialization and tile-cache paths.  The
+        filter only gates FUTURE materialization/caching; state that just
+        became unowned is dropped by :meth:`drop_unowned`, which the
+        rebalancer calls after its drain barrier."""
+        sp = self._streams.get(name)
+        if sp is None:
+            raise KeyError(f"no stream payload {name!r} (resident payloads "
+                           "are not shardable)")
+        sp.ownership = ownership
+
+    def drop_unowned(self, name: str) -> int:
+        """Evict cached state the current ownership filter excludes —
+        unowned decode tiles, plus the materialized body when the payload
+        itself is no longer owned.  Returns bytes freed (through the
+        normal LRU eviction accounting)."""
+        sp = self._streams.get(name)
+        if sp is None or sp.ownership is None:
+            return 0
+        freed = 0
+        for key in [k for k in self._cache if k[1] == name]:
+            unowned = (
+                not sp.ownership.owns_tile(key[2])
+                if key[0] == "tile"
+                else not sp.ownership.owns_payload()
+            )
+            if unowned:
+                freed += self._cache[key].nbytes
+                self._cache_evict(key)
+        return freed
+
+    def export_tiles(self, name: str) -> dict[int, np.ndarray]:
+        """Cached decode tiles (tile id -> values) — the warm-handoff
+        source a rebalance reads before this instance drops ownership."""
+        return {
+            key[2]: entry.value
+            for key, entry in self._cache.items()
+            if key[0] == "tile" and key[1] == name and entry.value is not None
+        }
+
+    def admit_tile(self, name: str, tid: int, values: np.ndarray) -> bool:
+        """Warm handoff: admit a tile decoded by another instance, subject
+        to the ownership filter and the byte budget.  Counts as neither
+        hit nor miss — no query was answered.  Returns True if admitted."""
+        sp = self._streams.get(name)
+        if sp is None or not sp.tile_entries:
+            raise KeyError(f"no tiled stream payload {name!r}")
+        if sp.ownership is not None and not sp.ownership.owns_tile(int(tid)):
+            return False
+        values = np.asarray(values)
+        self._cache_put(("tile", name, int(tid)),
+                        _CacheEntry(int(values.nbytes), values))
+        return True
 
     # ----------------------------------------------------------------- cache
     def _drop_named_cache_entries(self, name: str) -> None:
@@ -193,6 +329,9 @@ class CodecService:
         entry = self._cache.pop(key)
         self.cache_stats.resident_bytes -= entry.nbytes
         self.cache_stats.evictions += 1
+        per = self.cache_stats.for_payload(key[1])
+        per.resident_bytes -= entry.nbytes
+        per.evictions += 1
         if entry.on_evict is not None:
             entry.on_evict()
 
@@ -200,8 +339,10 @@ class CodecService:
         old = self._cache.pop(key, None)
         if old is not None:
             self.cache_stats.resident_bytes -= old.nbytes
+            self.cache_stats.for_payload(key[1]).resident_bytes -= old.nbytes
         self._cache[key] = entry
         self.cache_stats.resident_bytes += entry.nbytes
+        self.cache_stats.for_payload(key[1]).resident_bytes += entry.nbytes
         if self.cache_bytes is None:
             return
         while self.cache_stats.resident_bytes > self.cache_bytes and self._cache:
@@ -254,9 +395,7 @@ class CodecService:
         shape = enc.shape
         t = sp.tile_entries
         n_entries = int(np.prod(shape))
-        flat = np.ravel_multi_index(
-            tuple(idx[:, k] for k in range(idx.shape[1])), shape
-        )
+        flat = multi_to_flat(idx, shape)
         tids = flat // t
         if not len(flat):  # delegate so the dtype matches the untiled path
             return self._decode_batched(enc, idx), 0
@@ -267,16 +406,20 @@ class CodecService:
             key = ("tile", name, int(tid))
             entry = self._cache_touch(key)
             if entry is None:
-                self.cache_stats.misses += 1
+                self.cache_stats.miss(name)
                 info.cache_misses += 1
                 decoded += 1
                 start = int(tid) * t
                 stop = min(start + t, n_entries)
                 tpos = flat_to_multi(np.arange(start, stop, dtype=np.int64), shape)
                 tile = self._decode_batched(enc, tpos)
-                self._cache_put(key, _CacheEntry(int(tile.nbytes), tile))
+                # unowned tiles decode through WITHOUT caching — correct
+                # mid-rebalance, and resident tile bytes stay this
+                # instance's shard of the fleet total
+                if sp.ownership is None or sp.ownership.owns_tile(int(tid)):
+                    self._cache_put(key, _CacheEntry(int(tile.nbytes), tile))
             else:
-                self.cache_stats.hits += 1
+                self.cache_stats.hit(name)
                 info.cache_hits += 1
                 tile = entry.value
             if out is None:
@@ -301,17 +444,7 @@ class CodecService:
 
     def _validate(self, name: str, enc: codecs.Encoded,
                   indices: np.ndarray) -> np.ndarray:
-        idx = np.asarray(indices)
-        shape = enc.shape
-        if idx.ndim != 2 or idx.shape[1] != len(shape):
-            raise ValueError(
-                f"indices for {name!r} must be [B, {len(shape)}], got {idx.shape}"
-            )
-        if not np.issubdtype(idx.dtype, np.integer):
-            raise ValueError(f"indices must be integral, got {idx.dtype}")
-        if idx.size and ((idx < 0).any() or (idx >= np.asarray(shape)).any()):
-            raise ValueError(f"indices out of range for shape {shape}")
-        return idx
+        return validate_indices(name, tuple(enc.shape), indices)
 
     def decode_at(self, name: str, indices: np.ndarray) -> np.ndarray:
         """Chunked decode so arbitrarily large requests stream through

@@ -23,7 +23,7 @@ from typing import Iterator, Protocol, runtime_checkable
 
 import numpy as np
 
-from repro.core.nttd import flat_to_multi
+from repro.codecs.indexing import flat_to_multi
 
 
 @dataclasses.dataclass(frozen=True)

@@ -16,6 +16,8 @@ from __future__ import annotations
 
 import zlib
 
+import numpy as np
+
 from repro.codecs import container
 from repro.codecs.base import Encoded
 
@@ -30,16 +32,29 @@ class ChunkedWriter:
                                                           container.FLAG_CHUNKED))
         self._closed = False
 
-    def append(self, chunk: bytes) -> int:
-        """Append one chunk; returns its index in the footer."""
+    def append(
+        self, chunk: bytes, entry_range: tuple[int, int] | None = None
+    ) -> int:
+        """Append one chunk; returns its index in the footer.
+
+        ``entry_range=(start, stop)`` records the flat-entry span this
+        chunk ROUTES for (footer ``TCDR`` block) — the partition of the
+        index space the fleet router shards ownership by.  Ranges are
+        all-or-nothing across chunks: the footer drops them unless every
+        chunk has one.
+        """
         if self._closed:
             raise ValueError(f"{self.path}: writer already closed")
         if not chunk:
             raise ValueError("empty chunk")
+        start, stop = (None, None) if entry_range is None else map(int, entry_range)
+        if start is not None and not 0 <= start < stop:
+            raise ValueError(f"bad entry_range ({start}, {stop})")
         self._f.write(chunk)
         self._chunks.append(
             container.ChunkEntry(
-                self._offset, len(chunk), zlib.crc32(chunk) & 0xFFFFFFFF
+                self._offset, len(chunk), zlib.crc32(chunk) & 0xFFFFFFFF,
+                start, stop,
             )
         )
         self._offset += len(chunk)
@@ -71,13 +86,26 @@ class ChunkedWriter:
 
 
 def write_chunked(path: str, enc: Encoded, chunk_bytes: int = 1 << 20) -> int:
-    """Write a finished payload as a chunked v3 file; returns file bytes."""
+    """Write a finished payload as a chunked v3 file; returns file bytes.
+
+    Each byte chunk is stamped with an equal slice of the tensor's flat
+    entry space (chunk i of n routes entries ``[i*E/n, (i+1)*E/n)``) so a
+    fleet router can shard query ownership chunk-by-chunk without any
+    knowledge of the codec's body layout.
+    """
     if chunk_bytes <= 0:
         raise ValueError(f"chunk_bytes must be positive, got {chunk_bytes}")
     body = enc.to_bytes()
     if not body:
         raise ValueError("empty payload body")
+    n_entries = int(np.prod(enc.shape))
+    n_chunks = -(-len(body) // chunk_bytes)
     with ChunkedWriter(path, enc.codec_name) as w:
-        for off in range(0, len(body), chunk_bytes):
-            w.append(body[off : off + chunk_bytes])
+        for i, off in enumerate(range(0, len(body), chunk_bytes)):
+            lo = i * n_entries // n_chunks
+            hi = (i + 1) * n_entries // n_chunks
+            w.append(
+                body[off : off + chunk_bytes],
+                entry_range=(lo, hi) if hi > lo else None,
+            )
         return w.close()

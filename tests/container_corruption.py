@@ -1,0 +1,32 @@
+"""One canonical corruption recipe per container-v3 failure mode, shared
+by the load_stream (test_stream) and fleet (test_fleet) integrity tests
+so a footer-layout change cannot silently de-fang one suite."""
+import struct
+
+from repro.codecs import container
+
+
+def corrupt_chunk_byte(path: str, out: str) -> None:
+    """Flip one byte inside the first chunk's body (CRC must catch it)."""
+    blob = bytearray(open(path, "rb").read())
+    _, chunks = container.chunk_index(path)
+    blob[chunks[0].offset] ^= 0xFF
+    open(out, "wb").write(bytes(blob))
+
+
+def truncate_footer(path: str, out: str) -> None:
+    blob = open(path, "rb").read()
+    open(out, "wb").write(blob[:-6])
+
+
+def index_past_eof(path: str, out: str) -> None:
+    """Rewrite the footer so one chunk's extent points past EOF."""
+    blob = open(path, "rb").read()
+    _, chunks = container.chunk_index(path)
+    bad = [
+        container.ChunkEntry(c.offset, c.length + (1 << 20) * (i == 0), c.crc)
+        for i, c in enumerate(chunks)
+    ]
+    (footer_len,) = struct.unpack("<Q", blob[-12:-4])
+    body_end = len(blob) - 12 - footer_len
+    open(out, "wb").write(blob[:body_end] + container.pack_footer(bad))

@@ -1,0 +1,407 @@
+"""repro.fleet: consistent-hash routing, the multi-instance frontend,
+warm rebalancing, metrics roll-up, and container integrity on the fleet
+path."""
+import numpy as np
+import pytest
+
+import container_corruption
+
+from repro.codecs import container, get_codec
+from repro.fleet import FleetFrontend, HashRing, PayloadRoute, collect, rebalance
+from repro.serve.codec_service import CodecService, NotOwnedError, Ownership
+from repro.stream import write_chunked
+
+SHAPE = (32, 32, 16)
+
+
+@pytest.fixture(scope="module")
+def payload():
+    rng = np.random.default_rng(0)
+    x = rng.random(SHAPE).astype(np.float32)
+    return get_codec("ttd").fit(x, max_rank=4)
+
+
+@pytest.fixture()
+def payload_path(payload, tmp_path):
+    path = str(tmp_path / "p.tcdc")
+    write_chunked(path, payload, chunk_bytes=1024)
+    return path
+
+
+def _idx(n=200, seed=1, shape=SHAPE):
+    rng = np.random.default_rng(seed)
+    return np.stack([rng.integers(0, s, n) for s in shape], axis=1)
+
+
+def _single(path, tile_entries=None, **kw):
+    svc = CodecService(**kw)
+    svc.load_stream("t", path, tile_entries=tile_entries)
+    return svc
+
+
+# ---------------------------------------------------------------------------
+# hash ring
+# ---------------------------------------------------------------------------
+def test_ring_deterministic_and_distinct_replicas():
+    a = HashRing(["i0", "i1", "i2", "i3"], replication=2)
+    b = HashRing(["i3", "i1", "i0", "i2"], replication=2)  # order-independent
+    for k in range(50):
+        owners = a.owners(f"key{k}")
+        assert owners == b.owners(f"key{k}")
+        assert len(owners) == 2 and len(set(owners)) == 2
+    assert a.owner("key0") == a.owners("key0")[0]
+
+
+def test_ring_membership_change_moves_few_keys():
+    ring = HashRing(["i0", "i1", "i2", "i3"])
+    keys = [f"p/c{k}" for k in range(400)]
+    before = {k: ring.owner(k) for k in keys}
+    ring.remove("i3")
+    moved = [k for k in keys if before[k] != ring.owner(k)]
+    # ONLY keys i3 owned move — consistent hashing's whole point
+    assert all(before[k] == "i3" for k in moved)
+    assert len(moved) == sum(1 for k in keys if before[k] == "i3")
+    ring.add("i3")  # re-adding restores the original assignment
+    assert {k: ring.owner(k) for k in keys} == before
+
+
+def test_ring_rejects_bad_membership():
+    ring = HashRing(["i0"])
+    with pytest.raises(ValueError, match="already"):
+        ring.add("i0")
+    with pytest.raises(KeyError, match="not on the ring"):
+        ring.remove("nope")
+    ring.remove("i0")
+    with pytest.raises(RuntimeError, match="empty"):
+        ring.owner("k")
+
+
+# ---------------------------------------------------------------------------
+# payload routing
+# ---------------------------------------------------------------------------
+def test_route_uses_recorded_entry_ranges(payload_path):
+    name, chunks = container.chunk_index(payload_path)
+    assert all(c.entry_start is not None for c in chunks)
+    route = PayloadRoute("t", SHAPE, chunks)
+    n = int(np.prod(SHAPE))
+    flat = np.arange(n, dtype=np.int64)
+    cids = route.chunk_of(flat)
+    # every chunk id valid, monotone, and matching the recorded partition
+    assert cids.min() == 0 and cids.max() == len(chunks) - 1
+    for i, c in enumerate(chunks):
+        assert (cids[c.entry_start : c.entry_stop] == i).all()
+
+
+def test_route_uniform_fallback_and_tiles():
+    chunks = [container.ChunkEntry(0, 10, 0), container.ChunkEntry(10, 10, 0)]
+    route = PayloadRoute("t", (8, 4), chunks, tile_entries=8)
+    flat = np.arange(32, dtype=np.int64)
+    assert (route.chunk_of(flat[:16]) == 0).all()
+    assert (route.chunk_of(flat[16:]) == 1).all()
+    assert route.n_tiles == 4 and route.tiled
+    assert (route.group_of(flat) == flat // 8).all()
+
+
+def test_route_rejects_broken_partition():
+    chunks = [
+        container.ChunkEntry(0, 10, 0, entry_start=0, entry_stop=10),
+        container.ChunkEntry(10, 10, 0, entry_start=12, entry_stop=32),  # gap
+    ]
+    with pytest.raises(ValueError, match="partition"):
+        PayloadRoute("t", (8, 4), chunks)
+
+
+# ---------------------------------------------------------------------------
+# frontend correctness
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("tile_entries", [None, 64])
+def test_fleet_bit_identical_to_single_instance(payload_path, tile_entries):
+    single = CodecService()
+    single.load_stream("t", payload_path, tile_entries=tile_entries)
+    fleet = FleetFrontend(4)
+    fleet.load_stream("t", payload_path, tile_entries=tile_entries)
+    for seed in range(3):
+        idx = _idx(seed=seed)
+        np.testing.assert_array_equal(
+            fleet.decode_at("t", idx), single.decode_at("t", idx)
+        )
+
+
+def test_fleet_tickets_resolve_in_request_order(payload_path):
+    fleet = FleetFrontend(3)
+    fleet.load_stream("t", payload_path, tile_entries=64)
+    single = _single(payload_path, tile_entries=64)
+    batches = [_idx(n, seed=n) for n in (7, 113, 64)]
+    tickets = [fleet.submit("t", b) for b in batches]
+    out = fleet.flush()
+    assert not fleet.failed
+    for t, b in zip(tickets, batches):
+        np.testing.assert_array_equal(out[t], single.decode_at("t", b))
+
+
+def test_fleet_validates_before_fanout(payload_path):
+    fleet = FleetFrontend(2)
+    fleet.load_stream("t", payload_path)
+    with pytest.raises(KeyError, match="no payload"):
+        fleet.submit("nope", _idx())
+    with pytest.raises(ValueError, match=r"must be \[B, 3\]"):
+        fleet.submit("t", np.zeros((4, 2), np.int64))
+    with pytest.raises(ValueError, match="out of range"):
+        fleet.submit("t", np.full((1, 3), 99, np.int64))
+    with pytest.raises(ValueError, match="integral"):
+        fleet.submit("t", np.zeros((1, 3), np.float32))
+    assert fleet.flush() == {}  # nothing slipped into the queue
+
+
+def test_fleet_empty_batch(payload_path):
+    fleet = FleetFrontend(2)
+    fleet.load_stream("t", payload_path)
+    out = fleet.decode_at("t", np.zeros((0, 3), np.int64))
+    assert out.shape == (0,)
+
+
+def test_decode_at_holds_concurrent_results_for_next_flush(payload_path):
+    fleet = FleetFrontend(2)
+    fleet.load_stream("t", payload_path, tile_entries=64)
+    queued = fleet.submit("t", _idx(10))
+    fleet.decode_at("t", _idx(5, seed=9))  # resolves the queued ticket too
+    out = fleet.flush()
+    assert queued in out and out[queued].shape == (10,)
+
+
+def test_early_resolved_failures_reported_once_by_next_flush(payload_path):
+    fleet = FleetFrontend(2)
+    fleet.load_stream("t", payload_path, tile_entries=64)
+    doomed = fleet.submit("t", _idx(4))
+    fleet.unload("t")  # doomed will fail when resolved
+    fleet.load_stream("u", payload_path)
+    fleet.decode_at("u", _idx(3))  # resolves doomed; failure must be held
+    assert not fleet.failed  # ...deferred, not reported early
+    out = fleet.flush()
+    assert doomed in fleet.failed and doomed not in out
+    fleet.flush()
+    assert doomed not in fleet.failed  # reported exactly once, not forever
+
+
+def test_only_owners_materialize_untiled_payload(payload_path):
+    fleet = FleetFrontend(4)
+    route = fleet.load_stream("t", payload_path)  # chunk-granular routing
+    fleet.decode_at("t", _idx(400))
+    owners = {
+        fleet.ring.owner(route.chunk_key(c)) for c in range(route.n_chunks)
+    }
+    for iid, svc in fleet.services.items():
+        materialized = svc._streams["t"].enc is not None
+        assert materialized == (iid in owners), iid
+
+
+def test_shape_peek_body_is_accounted_and_evictable(payload_path):
+    """The fleet loader's shape peek materializes a body — it must join
+    the LRU ledger and be droppable once ownership moves away entirely."""
+    svc = CodecService()
+    svc.load_stream("t", payload_path, tile_entries=64)
+    svc.shape_of("t")
+    assert svc.cache_stats.resident_bytes > 0  # accounted, not off-ledger
+    svc.set_ownership("t", Ownership(chunk_ids=frozenset(), tile_ids=frozenset()))
+    assert svc.drop_unowned("t") > 0
+    assert svc._streams["t"].enc is None
+    assert svc.cache_stats.resident_bytes == 0
+
+
+def test_not_owned_error_on_misroute(payload_path):
+    svc = CodecService()
+    svc.load_stream("t", payload_path)
+    svc.set_ownership("t", Ownership(chunk_ids=frozenset()))
+    with pytest.raises(NotOwnedError, match="not owned"):
+        svc.decode_at("t", _idx(4))
+
+
+def test_replication_spreads_replicas(payload_path):
+    fleet = FleetFrontend(4, replication=2)
+    route = fleet.load_stream("t", payload_path, tile_entries=64)
+    # every tile key has two distinct owners; both hold the ownership filter
+    for tid in range(route.n_tiles):
+        owners = fleet.ring.owners(route.tile_key(tid))
+        assert len(set(owners)) == 2
+    np.testing.assert_array_equal(
+        fleet.decode_at("t", _idx()), _single(payload_path).decode_at("t", _idx())
+    )
+
+
+def test_admission_control_backpressure(payload_path):
+    idx = _idx(500)
+    fleet = FleetFrontend(2, max_inflight_bytes=2048)
+    fleet.load_stream("t", payload_path, tile_entries=64)
+    tickets = [fleet.submit("t", idx[s : s + 50]) for s in range(0, 500, 50)]
+    out = fleet.flush()
+    assert not fleet.failed
+    assert fleet.backpressure_flushes > 0  # budget forced early flushes
+    got = np.concatenate([out[t] for t in tickets])
+    single = _single(payload_path, tile_entries=64)
+    np.testing.assert_array_equal(got, single.decode_at("t", idx))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: sharded residency + live rebalance
+# ---------------------------------------------------------------------------
+def test_resident_bytes_shard_to_quarter(payload_path):
+    """4-instance tiled fleet: every instance resident ~1/4 of the single
+    instance (body replicated, tiles sharded — tiles dominate here)."""
+    idx = np.stack(
+        np.meshgrid(*[np.arange(s) for s in SHAPE], indexing="ij"), axis=-1
+    ).reshape(-1, len(SHAPE))  # EVERY entry -> every tile decoded once
+    single = _single(payload_path, tile_entries=64)
+    single.decode_at("t", idx)
+    total = single.cache_stats.resident_bytes
+
+    fleet = FleetFrontend(4)
+    fleet.load_stream("t", payload_path, tile_entries=64)
+    out = fleet.decode_at("t", idx)
+    np.testing.assert_array_equal(out, single.decode_at("t", idx))
+    residents = [
+        svc.cache_stats.resident_bytes for svc in fleet.services.values()
+    ]
+    for r in residents:
+        assert r < 0.45 * total, (residents, total)
+    # replication=1: fleet-wide tile bytes equal the single instance's
+    # (each tile cached exactly once); only the small body is per-instance
+    tile_bytes = lambda svc: sum(  # noqa: E731
+        e.nbytes for k, e in svc._cache.items() if k[0] == "tile"
+    )
+    assert sum(tile_bytes(s) for s in fleet.services.values()) == tile_bytes(single)
+
+
+def test_live_rebalance_4_to_3_zero_failed_tickets(payload_path):
+    """Acceptance: a ring change mid-query-stream completes with zero
+    failed tickets and stays bit-identical."""
+    fleet = FleetFrontend(4)
+    fleet.load_stream("t", payload_path, tile_entries=64)
+    batches = [_idx(60, seed=s) for s in range(6)]
+    tickets = [fleet.submit("t", b) for b in batches[:3]]
+    report = rebalance(fleet, remove=["i3"])  # drains the 3 queued tickets
+    assert fleet.instances() == ["i0", "i1", "i2"]
+    assert report.removed == ["i3"] and report.total_moved > 0
+    tickets += [fleet.submit("t", b) for b in batches[3:]]
+    out = fleet.flush()
+    assert not fleet.failed  # ZERO failed tickets across the change
+    single = _single(payload_path, tile_entries=64)
+    for t, b in zip(tickets, batches):
+        np.testing.assert_array_equal(out[t], single.decode_at("t", b))
+
+
+def test_rebalance_scale_up_warm_handoff(payload_path):
+    fleet = FleetFrontend(2)
+    fleet.load_stream("t", payload_path, tile_entries=64)
+    idx = _idx(400)
+    fleet.decode_at("t", idx)  # warm the 2-instance caches
+    report = rebalance(fleet, add=["i2", "i3"])
+    assert fleet.instances() == ["i0", "i1", "i2", "i3"]
+    assert report.tiles_warmed["t"] > 0  # joiners start warm, not cold
+    assert report.bytes_dropped > 0  # old owners dropped moved tiles
+    misses_before = collect(fleet).fleet.misses
+    np.testing.assert_array_equal(
+        fleet.decode_at("t", idx),
+        _single(payload_path, tile_entries=64).decode_at("t", idx),
+    )
+    # the handoff means the re-query is mostly warm: few new tile decodes
+    new_tile_misses = collect(fleet).fleet.misses - misses_before
+    assert new_tile_misses <= 2 + len(fleet.services)  # bodies, not tiles
+
+
+def test_rebalance_rejects_bad_membership(payload_path):
+    fleet = FleetFrontend(2)
+    fleet.load_stream("t", payload_path)
+    with pytest.raises(ValueError, match="already"):
+        rebalance(fleet, add=["i0"])
+    with pytest.raises(KeyError, match="not in the fleet"):
+        rebalance(fleet, remove=["nope"])
+    with pytest.raises(ValueError, match="empty fleet"):
+        rebalance(fleet, remove=["i0", "i1"])
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+def test_metrics_roll_up(payload_path):
+    fleet = FleetFrontend(3)
+    fleet.load_stream("t", payload_path, tile_entries=64)
+    idx = _idx(300)
+    fleet.decode_at("t", idx)
+    fleet.decode_at("t", idx)  # second pass: hits
+    m = collect(fleet)
+    assert set(m.instances) == {"i0", "i1", "i2"}
+    assert m.fleet.hits == sum(i.cache.hits for i in m.instances.values())
+    assert m.fleet.resident_bytes == sum(
+        i.cache.resident_bytes for i in m.instances.values()
+    )
+    assert m.per_payload["t"].hits == m.fleet.hits  # single payload
+    assert 0 < m.per_payload["t"].hit_rate < 1
+    for im in m.instances.values():
+        if im.flushes:
+            assert im.decode_p50_ms is not None
+            assert im.decode_p99_ms >= im.decode_p50_ms
+    d = m.as_dict()
+    assert d["instances"]["i0"]["per_payload"]["t"]["misses"] >= 0
+    import json
+
+    json.dumps(d)  # JSON-able for BENCH_fleet.json
+
+
+def test_per_payload_cache_stats_on_service(payload_path, tmp_path, payload):
+    """Satellite: CodecService.cache_stats carries a per-payload breakdown."""
+    p2 = str(tmp_path / "q.tcdc")
+    write_chunked(p2, payload, chunk_bytes=1024)
+    svc = CodecService()
+    svc.load_stream("a", payload_path, tile_entries=64)
+    svc.load_stream("b", p2)
+    idx = _idx(50)
+    svc.decode_at("a", idx)
+    svc.decode_at("a", idx)
+    svc.decode_at("b", idx)
+    per = svc.cache_stats.per_payload
+    assert set(per) == {"a", "b"}
+    assert per["a"].hits > 0 and per["a"].misses > 0
+    assert per["b"].misses == 1  # one body materialization
+    assert per["a"].resident_bytes + per["b"].resident_bytes == (
+        svc.cache_stats.resident_bytes
+    )
+    assert svc.cache_stats.hits == per["a"].hits + per["b"].hits
+    svc.unload("a")
+    assert svc.cache_stats.per_payload["a"].resident_bytes == 0
+    assert svc.cache_stats.per_payload["a"].evictions > 0
+
+
+# ---------------------------------------------------------------------------
+# container v3 integrity on the fleet path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "corruptor, match",
+    [
+        (container_corruption.corrupt_chunk_byte, "chunk checksum"),
+        (container_corruption.truncate_footer, "truncated|footer"),
+        (container_corruption.index_past_eof, "outside data region"),
+    ],
+)
+def test_fleet_rejects_corrupt_containers(payload_path, tmp_path, corruptor, match):
+    bad = str(tmp_path / "bad.tcdc")
+    corruptor(payload_path, bad)
+    fleet = FleetFrontend(3)
+    with pytest.raises(ValueError, match=match):
+        fleet.load_stream("t", bad, tile_entries=64)
+    # nothing half-registered: the fleet still serves other payloads
+    fleet.load_stream("ok", payload_path)
+    assert fleet.decode_at("ok", _idx(4)).shape == (4,)
+
+
+def test_failed_reload_unregisters_cleanly(payload_path, tmp_path):
+    """Re-loading a served name with a corrupt file must not leave a
+    stale route pointing at unloaded instance registrations."""
+    fleet = FleetFrontend(2)
+    fleet.load_stream("t", payload_path, tile_entries=64)
+    bad = str(tmp_path / "bad.tcdc")
+    container_corruption.corrupt_chunk_byte(payload_path, bad)
+    with pytest.raises(ValueError, match="chunk checksum"):
+        fleet.load_stream("t", bad)
+    assert "t" not in fleet.payloads()  # fully unregistered, not half
+    fleet.load_stream("t", payload_path)  # and immediately reloadable
+    assert fleet.decode_at("t", _idx(4)).shape == (4,)

@@ -149,6 +149,61 @@ def test_chunked_writer_rejects_use_after_close(tmp_path):
         w.append(b"y")
 
 
+def test_load_stream_corrupt_chunk_is_clean_error_not_garbage(tmp_path):
+    """Lazy loading defers chunk reads — a flipped byte must surface as a
+    checksum ValueError at first decode, never as silently wrong values."""
+    import container_corruption
+
+    enc = _tt_payload()
+    path = str(tmp_path / "p.tcdc")
+    write_chunked(path, enc, chunk_bytes=512)
+    bad = str(tmp_path / "bad.tcdc")
+    container_corruption.corrupt_chunk_byte(path, bad)
+    svc = CodecService()
+    svc.load_stream("t", bad)  # index parses fine; corruption is in a body
+    with pytest.raises(ValueError, match="chunk checksum"):
+        svc.decode_at("t", _sample_indices(SHAPE))
+
+
+@pytest.mark.parametrize("mode, match", [
+    ("truncate_footer", "truncated|footer"),
+    ("index_past_eof", "outside data region"),
+])
+def test_load_stream_rejects_broken_chunk_index(tmp_path, mode, match):
+    import container_corruption
+
+    enc = _tt_payload()
+    path = str(tmp_path / "p.tcdc")
+    write_chunked(path, enc, chunk_bytes=512)
+    bad = str(tmp_path / "bad.tcdc")
+    getattr(container_corruption, mode)(path, bad)
+    svc = CodecService()
+    with pytest.raises(ValueError, match=match):
+        svc.load_stream("t", bad)
+    assert svc.payloads() == []
+
+
+def test_chunk_index_records_entry_ranges(tmp_path):
+    """write_chunked stamps each chunk with its slice of the flat entry
+    space — the routing partition the fleet ring shards ownership by."""
+    enc = _tt_payload()
+    path = str(tmp_path / "p.tcdc")
+    write_chunked(path, enc, chunk_bytes=512)
+    name, chunks = container.chunk_index(path)
+    assert name == "ttd" and len(chunks) > 1
+    n = int(np.prod(SHAPE))
+    assert chunks[0].entry_start == 0 and chunks[-1].entry_stop == n
+    for a, b in zip(chunks[:-1], chunks[1:]):
+        assert a.entry_stop == b.entry_start  # contiguous partition
+    # a writer that records no ranges still produces a loadable file
+    plain = str(tmp_path / "plain.tcdc")
+    with ChunkedWriter(plain, "ttd") as w:
+        w.append(enc.to_bytes())
+    _, plain_chunks = container.chunk_index(plain)
+    assert plain_chunks[0].entry_start is None
+    assert container.load_file(plain).to_bytes() == enc.to_bytes()
+
+
 # ---------------------------------------------------------------------------
 # fit_stream
 # ---------------------------------------------------------------------------
