@@ -10,7 +10,6 @@ import numpy as np
 from benchmarks.common import FULL, emit, save_rows
 from repro.codecs import get_codec
 from repro.codecs.indexing import flat_to_multi
-from repro.core import nttd
 from repro.core.folding import make_folding_spec
 from repro.data import synthetic_tensors as st
 

@@ -9,8 +9,6 @@ pays a full decompression; the summary row reports NTTD's time ratio
 against the 64x mode growth."""
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from benchmarks.common import (

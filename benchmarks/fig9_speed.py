@@ -4,8 +4,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.common import FULL, emit, save_rows
 from repro.codecs import available, get_codec
 from repro.data import synthetic_tensors as st

@@ -26,9 +26,9 @@ def run() -> None:
     b, k, r = 65536, 10, 8
     f = jnp.asarray(rng.normal(size=(b, r)), jnp.float32)
     m = jnp.asarray(rng.normal(size=(b, k, r, r)) * 0.2, jnp.float32)
-    l = jnp.asarray(rng.normal(size=(b, r)), jnp.float32)
+    last = jnp.asarray(rng.normal(size=(b, r)), jnp.float32)
     fn = jax.jit(lambda a, bb, c: ops.tt_contract(a, bb, c, impl="ref"))
-    dt = _time(fn, f, m, l)
+    dt = _time(fn, f, m, last)
     emit("kernel_tt_contract_ref", dt * 1e6, f"B={b};K={k};R={r};{b/dt/1e6:.1f}M entries/s")
 
     t, h = 10, 16

@@ -54,7 +54,9 @@ def main():
         rows = [r for r in rows if r["mesh"] == args.mesh]
     if args.rules:
         rows = [r for r in rows if r.get("rules") == args.rules]
-    shape_key = lambda s: SHAPE_ORDER.index(s) if s in SHAPE_ORDER else len(SHAPE_ORDER)
+    shape_key = lambda s: (  # noqa: E731
+        SHAPE_ORDER.index(s) if s in SHAPE_ORDER else len(SHAPE_ORDER)
+    )
     rows.sort(key=lambda r: (r["arch"], shape_key(r["shape"]), r["mesh"]))
     print(
         "| arch | shape | mesh | bound | compute_s | memory_s | collective_s "

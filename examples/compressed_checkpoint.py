@@ -9,7 +9,6 @@ sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.compress import checkpoint_codec as cc

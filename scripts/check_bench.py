@@ -1,0 +1,164 @@
+#!/usr/bin/env python3
+"""Gate the BENCH_*.json trajectory against a committed baseline.
+
+The smokes (``fig5_compress_scaling --stream --smoke``, ``fleet_bench
+--smoke [--procs N]``) write per-PR performance records; this script
+fails CI when a headline metric regresses more than ``--tolerance``
+(default 30%) against ``benchmarks/results/baseline.json``:
+
+- ``stream.entries_per_sec``  (higher is better; BENCH_stream.json)
+- ``fleet.entries_per_sec``   (higher is better; BENCH_fleet.json)
+- ``fleet.p99_ms``            (lower is better;  BENCH_fleet.json)
+- ``fleet_procs.entries_per_sec`` / ``fleet_procs.p99_ms``
+                              (BENCH_fleet_procs.json, the multi-process cell)
+
+Metrics whose BENCH file is absent are skipped unless named in
+``--require`` (CI's tier1 job requires stream+fleet, the multi-process
+smoke job requires fleet_procs — each job gates only what it produced).
+``--update`` reseeds the baseline from the current BENCH files.
+
+    python scripts/check_bench.py --require stream --require fleet
+    python scripts/check_bench.py --update
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "..", "benchmarks", "results")
+BASELINE = os.path.join(RESULTS, "baseline.json")
+
+#: group -> (bench file, {metric: (extractor over runs, higher_is_better)})
+GROUPS = {
+    "stream": (
+        "BENCH_stream.json",
+        {"entries_per_sec": (lambda runs: max(r["entries_per_sec"] for r in runs), True)},
+    ),
+    "fleet": (
+        "BENCH_fleet.json",
+        {
+            "entries_per_sec": (lambda runs: max(r["entries_per_sec"] for r in runs), True),
+            "p99_ms": (
+                lambda runs: min(r["p99_ms"] for r in runs if r["p99_ms"] is not None),
+                False,
+            ),
+        },
+    ),
+    "fleet_procs": (
+        "BENCH_fleet_procs.json",
+        {
+            "entries_per_sec": (lambda runs: max(r["entries_per_sec"] for r in runs), True),
+            "p99_ms": (
+                lambda runs: min(r["p99_ms"] for r in runs if r["p99_ms"] is not None),
+                False,
+            ),
+        },
+    ),
+}
+
+
+def current_metrics() -> dict[str, dict[str, float]]:
+    out: dict[str, dict[str, float]] = {}
+    for group, (fname, metrics) in GROUPS.items():
+        path = os.path.join(RESULTS, fname)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            runs = json.load(f)["runs"]
+        out[group] = {
+            name: round(float(extract(runs)), 4)
+            for name, (extract, _) in metrics.items()
+        }
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--baseline", default=BASELINE)
+    parser.add_argument(
+        "--tolerance",
+        type=float,
+        default=float(os.environ.get("REPRO_BENCH_TOLERANCE", "0.30")),
+        help="allowed fractional regression (default 0.30 = 30%%)",
+    )
+    parser.add_argument(
+        "--require", action="append", default=[], choices=sorted(GROUPS),
+        help="fail if this group's BENCH file is missing (repeatable)",
+    )
+    parser.add_argument(
+        "--update", action="store_true",
+        help="reseed the baseline from the current BENCH files",
+    )
+    args = parser.parse_args(argv)
+
+    current = current_metrics()
+    missing = [g for g in args.require if g not in current]
+    if missing:
+        print(f"check_bench: required BENCH files missing for: {', '.join(missing)}")
+        return 1
+
+    if args.update:
+        baseline = {}
+        if os.path.exists(args.baseline):
+            with open(args.baseline) as f:
+                baseline = json.load(f)
+        baseline.update(current)
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"check_bench: baseline updated -> {os.path.relpath(args.baseline)}")
+        for group, metrics in sorted(current.items()):
+            for name, value in sorted(metrics.items()):
+                print(f"  {group}.{name} = {value}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"check_bench: no baseline at {args.baseline} (seed with --update)")
+        return 1
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = []
+    checked = 0
+    for group, metrics in sorted(current.items()):
+        base_group = baseline.get(group, {})
+        for name, value in sorted(metrics.items()):
+            base = base_group.get(name)
+            if base is None:
+                print(f"  {group}.{name:<16} = {value:>12.1f}  (no baseline, skipped)")
+                continue
+            _, higher_better = GROUPS[group][1][name]
+            if higher_better:
+                floor = base * (1 - args.tolerance)
+                ok = value >= floor
+                bound = f">= {floor:.1f}"
+            else:
+                ceil = base * (1 + args.tolerance)
+                ok = value <= ceil
+                bound = f"<= {ceil:.3f}"
+            checked += 1
+            status = "ok" if ok else "REGRESSION"
+            print(
+                f"  {group}.{name:<16} = {value:>12.1f}  "
+                f"(baseline {base:.1f}, {bound}) {status}"
+            )
+            if not ok:
+                failures.append(f"{group}.{name}")
+    if not checked:
+        print("check_bench: nothing to check (no BENCH files found)")
+        return 1
+    if failures:
+        print(
+            f"check_bench: {len(failures)} metric(s) regressed more than "
+            f"{args.tolerance:.0%}: {', '.join(failures)}"
+        )
+        return 1
+    print(f"check_bench: {checked} metric(s) within {args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -67,7 +67,7 @@ def measure(tag: str, cfg_override=None, rules_override=None, depths=(2, 4)):
     f1, b1, c1 = costs(d1)
     f2, b2, c2 = costs(d2)
     nb = cfg.n_blocks
-    ex = lambda v1, v2: v1 + (nb - d1) * (v2 - v1) / (d2 - d1)
+    ex = lambda v1, v2: v1 + (nb - d1) * (v2 - v1) / (d2 - d1)  # noqa: E731
     flops = ex(f1, f2)
     bytes_ = ex(b1, b2)
     coll = {k: ex(c1.get(k, 0.0), c2.get(k, 0.0)) for k in set(c1) | set(c2)}
@@ -81,7 +81,7 @@ def measure(tag: str, cfg_override=None, rules_override=None, depths=(2, 4)):
                 mem.argument_size_in_bytes / mesh_lib.HBM_BW)
     frac = ideal / max(terms.values())
     print(f"== {tag} ({time.time()-t0:.0f}s) ==")
-    print(f"  terms: " + " ".join(f"{k}={v:.3f}" for k, v in terms.items())
+    print("  terms: " + " ".join(f"{k}={v:.3f}" for k, v in terms.items())
           + f" fraction={frac:.4f}")
     print(f"  temp={mem.temp_size_in_bytes/1e9:.0f}GB args={mem.argument_size_in_bytes/1e9:.0f}GB")
     bd = {k: v for k, v in sorted(coll.items()) if ":" in k and v > 1e9}

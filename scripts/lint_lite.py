@@ -1,0 +1,200 @@
+#!/usr/bin/env python3
+"""Offline approximation of the repo's ruff gate (see [tool.ruff] in
+pyproject.toml) for machines without ruff installed — CI runs the real
+thing; this keeps the lint job green from a network-less dev box.
+
+Checks implemented (a subset of ``E4/E7/E9/E501/F/I``):
+
+- E501  line longer than 100 characters
+- E401  multiple imports on one line (``import os, sys``)
+- E701/E702  compound statements (colon/semicolon) — rough, string-safe-ish
+- E711/E712  comparison to None/True/False with ==/!=
+- E722  bare except
+- E731  lambda assignment (respects ``# noqa``)
+- E741  ambiguous names ``l``/``O``/``I`` bound by assignment/for/args
+- E9    syntax errors (ast.parse)
+- F401  imported but unused (respects ``__all__``, ``# noqa``)
+- F541  f-string without placeholders
+- I001  import block ordering: stdlib -> third-party -> first-party
+        (repro/benchmarks), alphabetical within a section, straight
+        imports before from-imports
+
+    python scripts/lint_lite.py [paths...]   # default: the whole repo
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+LINE_LIMIT = 100
+FIRST_PARTY = {"repro", "benchmarks"}
+STDLIB = set(getattr(sys, "stdlib_module_names", ()))
+
+
+def _noqa(lines: list[str], lineno: int) -> bool:
+    return "noqa" in lines[lineno - 1] if 0 < lineno <= len(lines) else False
+
+
+def _section(module: str) -> int:
+    root = module.split(".")[0]
+    if root == "__future__":
+        return 0
+    if root in STDLIB:
+        return 1
+    if root in FIRST_PARTY:
+        return 3
+    return 2  # third-party (unknown modules too, matching ruff's default)
+
+
+def check_file(path: str) -> list[str]:
+    problems: list[str] = []
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    lines = src.splitlines()
+
+    def report(lineno: int, code: str, msg: str) -> None:
+        if not _noqa(lines, lineno):
+            problems.append(f"{path}:{lineno}: {code} {msg}")
+
+    for i, line in enumerate(lines, 1):
+        if len(line) > LINE_LIMIT:
+            report(i, "E501", f"line too long ({len(line)} > {LINE_LIMIT})")
+
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [f"{path}:{e.lineno}: E999 {e.msg}"]
+
+    # -- names used anywhere (rough F401 denominator) ----------------------
+    used: set[str] = set()
+    dunder_all: set[str] = set()
+    format_specs: set[int] = set()  # JoinedStr nodes that are format specs
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FormattedValue) and node.format_spec is not None:
+            format_specs.add(id(node.format_spec))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            pass  # attribute roots arrive via their Name node
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "__all__":
+                    if isinstance(node.value, (ast.List, ast.Tuple)):
+                        dunder_all |= {
+                            e.value
+                            for e in node.value.elts
+                            if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                        }
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            if len(node.names) > 1:
+                report(node.lineno, "E401", "multiple imports on one line")
+            for alias in node.names:
+                bound = alias.asname or alias.name.split(".")[0]
+                if bound not in used and bound not in dunder_all:
+                    report(node.lineno, "F401", f"{alias.name!r} imported but unused")
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                bound = alias.asname or alias.name
+                if bound not in used and bound not in dunder_all:
+                    report(node.lineno, "F401", f"{alias.name!r} imported but unused")
+        elif isinstance(node, ast.Compare):
+            for op, comp in zip(node.ops, node.comparators):
+                if isinstance(op, (ast.Eq, ast.NotEq)) and isinstance(comp, ast.Constant):
+                    if comp.value is None:
+                        report(node.lineno, "E711", "comparison to None with ==/!=")
+                    elif comp.value is True or comp.value is False:
+                        report(node.lineno, "E712", f"comparison to {comp.value} with ==/!=")
+        elif isinstance(node, ast.ExceptHandler) and node.type is None:
+            report(node.lineno, "E722", "bare except")
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Lambda):
+            report(node.lineno, "E731", "lambda assignment")
+        elif isinstance(node, ast.JoinedStr) and id(node) not in format_specs:
+            if not any(isinstance(v, ast.FormattedValue) for v in node.values):
+                report(node.lineno, "F541", "f-string without placeholders")
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            args = node.args
+            for a in (
+                args.posonlyargs + args.args + args.kwonlyargs
+                + ([args.vararg] if args.vararg else [])
+                + ([args.kwarg] if args.kwarg else [])
+            ):
+                if a.arg in {"l", "O", "I"}:
+                    report(a.lineno, "E741", f"ambiguous argument name {a.arg!r}")
+        elif isinstance(node, (ast.Name,)) and isinstance(
+            getattr(node, "ctx", None), ast.Store
+        ):
+            if node.id in {"l", "O", "I"}:
+                report(node.lineno, "E741", f"ambiguous variable name {node.id!r}")
+
+    # -- import ordering (I001, module top-level blocks) -------------------
+    # Matches ruff's isort defaults: sections stdlib -> third-party ->
+    # first-party; within a section straight imports precede from-imports,
+    # each alphabetized.  A block interrupted by any other statement is
+    # checked on its own (matching ruff, which only sorts contiguous runs).
+    def check_block(block: list[tuple[int, tuple]]) -> None:
+        keys = [k for _, k in block]
+        if keys != sorted(keys):
+            for (lineno, key), prev in zip(block[1:], keys):
+                if key < prev:
+                    report(lineno, "I001", "import block is un-sorted or un-sectioned")
+                    break
+
+    block: list[tuple[int, tuple]] = []
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            mod = node.names[0].name
+            block.append((node.lineno, (_section(mod), 0, mod.lower())))
+        elif isinstance(node, ast.ImportFrom):
+            mod = ("." * node.level) + (node.module or "")
+            block.append(
+                (node.lineno, (_section(mod or "."), 1, (node.module or "").lower()))
+            )
+        else:
+            if block:
+                check_block(block)
+            block = []
+    if block:
+        check_block(block)
+    return problems
+
+
+def iter_py(paths: list[str]):
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+        else:
+            for root, dirs, files in os.walk(p):
+                dirs[:] = [d for d in dirs if d not in {"__pycache__", ".git"}]
+                yield from (
+                    os.path.join(root, f) for f in files if f.endswith(".py")
+                )
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    paths = argv or [
+        os.path.join(repo, d)
+        for d in ("src", "tests", "benchmarks", "scripts", "examples")
+    ]
+    problems: list[str] = []
+    n = 0
+    for path in sorted(iter_py(paths)):
+        n += 1
+        problems.extend(check_file(path))
+    for p in problems:
+        print(p)
+    print(f"lint_lite: {n} files, {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

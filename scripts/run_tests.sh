@@ -1,23 +1,32 @@
 #!/usr/bin/env bash
-# Reproduce CI (tier-1) locally:
+# Reproduce CI (tier-1) locally.  CI runs these same phases as separate
+# named workflow steps so a failure is attributable to one phase:
 #
-#     scripts/run_tests.sh            # full tier-1 suite
-#     scripts/run_tests.sh -m 'not slow'   # skip the dry-run compile cells
+#     scripts/run_tests.sh                  # every phase, in CI order
+#     scripts/run_tests.sh registry         # codec registry smoke only
+#     scripts/run_tests.sh pytest           # main suite (everything but SPMD)
+#     scripts/run_tests.sh spmd             # SPMD suite (8 host devices)
+#     scripts/run_tests.sh stream-smoke     # streaming fit -> BENCH_stream.json
+#     scripts/run_tests.sh fleet-smoke      # 3-instance in-process fleet
+#     scripts/run_tests.sh fleet-procs-smoke  # 3 OS-process workers (sockets)
+#     scripts/run_tests.sh bench-gate       # BENCH_*.json vs committed baseline
+#     scripts/run_tests.sh -m 'not slow'    # pytest passthrough (custom select)
 #
-# Phase 1 runs everything except the SPMD suite with the REAL single-device
-# CPU view (tests/conftest.py requires it for smoke tests and benches).
-# Phase 2 runs tests/test_spmd.py under a forced 8-device host platform —
-# its subprocess tests force their own device count either way, but the
-# explicit flag means a bare `pytest tests/test_spmd.py -k <case>` rerun of
-# a failure behaves the same as CI.
+# Phase `pytest` runs everything except the SPMD suite with the REAL
+# single-device CPU view (tests/conftest.py requires it for smoke tests and
+# benches).  Phase `spmd` runs tests/test_spmd.py under a forced 8-device
+# host platform — its subprocess tests force their own device count either
+# way, but the explicit flag means a bare `pytest tests/test_spmd.py -k
+# <case>` rerun of a failure behaves the same as CI.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# Fast registry smoke: a broken codec adapter fails here, before pytest
-# collection ever starts.
-python - <<'PY'
+phase_registry() {
+    # Fast registry smoke: a broken codec adapter fails here, before pytest
+    # collection ever starts.
+    python - <<'PY'
 from repro.codecs import available, get_codec
 
 expected = {"cpd", "nttd", "szlite", "tensor_ring", "ttd", "tucker"}
@@ -29,31 +38,74 @@ for name in sorted(names):
     assert codec.encoded_cls.codec_name == name, name
 print(f"codec registry OK: {', '.join(sorted(names))}")
 PY
+}
 
-# Custom selections run as a single pass-through invocation (the SPMD
-# subprocess tests force their own device count regardless), so paths
-# never run twice and keep the single-device main-process view.
-if [ "$#" -gt 0 ]; then
-    exec python -m pytest -x -q "$@"
-fi
+phase_pytest() {
+    python -m pytest -x -q --ignore=tests/test_spmd.py
+}
 
-python -m pytest -x -q --ignore=tests/test_spmd.py
+phase_spmd() {
+    XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+        python -m pytest -x -q tests/test_spmd.py
+}
 
-XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
-    python -m pytest -x -q tests/test_spmd.py
+phase_stream_smoke() {
+    # Streaming smoke: synthetic SlabSource -> fit_stream -> chunked container
+    # -> CodecService.load_stream -> decode_at round-trip, and a CI-sized
+    # entries/sec baseline written to benchmarks/results/BENCH_stream.json so
+    # the streaming-throughput trajectory is tracked from PR to PR.
+    python -m benchmarks.fig5_compress_scaling --stream --smoke
+    test -s benchmarks/results/BENCH_stream.json
+    echo "streaming smoke OK: $(tr -d '\n' < benchmarks/results/BENCH_stream.json | head -c 200)"
+}
 
-# Streaming smoke: synthetic SlabSource -> fit_stream -> chunked container
-# -> CodecService.load_stream -> decode_at round-trip, and a CI-sized
-# entries/sec baseline written to benchmarks/results/BENCH_stream.json so
-# the streaming-throughput trajectory is tracked from PR to PR.
-python -m benchmarks.fig5_compress_scaling --stream --smoke
-test -s benchmarks/results/BENCH_stream.json
-echo "streaming smoke OK: $(tr -d '\n' < benchmarks/results/BENCH_stream.json | head -c 200)"
+phase_fleet_smoke() {
+    # Fleet smoke: a 3-instance fleet over the checked-in chunked payload —
+    # every batch verified bit-identical against a single resident
+    # CodecService, plus a live 3->2 rebalance mid-query-stream with zero
+    # failed tickets.  BENCH_fleet.json tracks throughput/p99/hit rates.
+    python -m benchmarks.fleet_bench --smoke
+    test -s benchmarks/results/BENCH_fleet.json
+    echo "fleet smoke OK: $(tr -d '\n' < benchmarks/results/BENCH_fleet.json | head -c 200)"
+}
 
-# Fleet smoke: a 3-instance fleet over the checked-in chunked payload —
-# every batch verified bit-identical against a single resident
-# CodecService, plus a live 3->2 rebalance mid-query-stream with zero
-# failed tickets.  BENCH_fleet.json tracks throughput/p99/hit rates.
-python -m benchmarks.fleet_bench --smoke
-test -s benchmarks/results/BENCH_fleet.json
-echo "fleet smoke OK: $(tr -d '\n' < benchmarks/results/BENCH_fleet.json | head -c 200)"
+phase_fleet_procs_smoke() {
+    # Multi-process fleet smoke: the same protocol over 3 real OS-process
+    # workers (repro.fleet.worker behind SocketTransport) — bit-identical to
+    # a single resident instance, including a live rebalance that terminates
+    # one worker with zero failed tickets.
+    python -m benchmarks.fleet_bench --smoke --procs 3
+    test -s benchmarks/results/BENCH_fleet_procs.json
+    echo "fleet procs smoke OK: $(tr -d '\n' < benchmarks/results/BENCH_fleet_procs.json | head -c 200)"
+}
+
+phase_bench_gate() {
+    # Fail on >30% regression of the headline BENCH metrics vs the
+    # committed baseline (scripts/check_bench.py --update reseeds it).
+    python scripts/check_bench.py
+}
+
+case "${1:-all}" in
+    registry)          phase_registry ;;
+    pytest)            phase_pytest ;;
+    spmd)              phase_spmd ;;
+    stream-smoke)      phase_stream_smoke ;;
+    fleet-smoke)       phase_fleet_smoke ;;
+    fleet-procs-smoke) phase_fleet_procs_smoke ;;
+    bench-gate)        phase_bench_gate ;;
+    all)
+        phase_registry
+        phase_pytest
+        phase_spmd
+        phase_stream_smoke
+        phase_fleet_smoke
+        phase_fleet_procs_smoke
+        phase_bench_gate
+        ;;
+    *)
+        # Custom selections run as a single pass-through invocation (the SPMD
+        # subprocess tests force their own device count regardless), so paths
+        # never run twice and keep the single-device main-process view.
+        exec python -m pytest -x -q "$@"
+        ;;
+esac

@@ -21,14 +21,13 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import nttd, reorder
 from repro.codecs.indexing import flat_to_multi
+from repro.core import nttd, reorder
 from repro.core.folding import FoldingSpec, make_folding_spec
 from repro.optim import optimizers
 

@@ -110,8 +110,8 @@ def make_folding_spec(shape: Sequence[int], d_prime: int | None = None) -> Foldi
     d = len(shape)
     factors = np.array([choose_factors(n, d_prime) for n in shape], dtype=np.int64)
     strides = np.ones((d, d_prime), dtype=np.int64)
-    for l in range(d_prime - 2, -1, -1):
-        strides[:, l] = strides[:, l + 1] * factors[:, l + 1]
+    for j in range(d_prime - 2, -1, -1):
+        strides[:, j] = strides[:, j + 1] * factors[:, j + 1]
     fstrides = np.ones((d, d_prime), dtype=np.int64)
     for k in range(d - 2, -1, -1):
         fstrides[k, :] = fstrides[k + 1, :] * factors[k + 1, :]

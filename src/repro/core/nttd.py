@@ -48,7 +48,7 @@ def init_params(key: jax.Array, spec: FoldingSpec, cfg: NTTDConfig) -> Params:
         params[f"embed_{m}"] = (
             jax.random.normal(k, (m, h), cfg.dtype) * (1.0 / np.sqrt(h))
         )
-    glorot = lambda k, shape: jax.random.normal(k, shape, cfg.dtype) * jnp.sqrt(
+    glorot = lambda k, shape: jax.random.normal(k, shape, cfg.dtype) * jnp.sqrt(  # noqa: E731
         2.0 / (shape[0] + shape[-1])
     )
     params["lstm"] = {
@@ -84,7 +84,7 @@ def apply(
     r = cfg.rank
     # --- embedding lookup (shared tables by mode length) -------------------
     embeds = [
-        params[f"embed_{m}"][folded_idx[:, l]] for l, m in enumerate(spec.folded_shape)
+        params[f"embed_{m}"][folded_idx[:, j]] for j, m in enumerate(spec.folded_shape)
     ]
     x = jnp.stack(embeds, axis=1)  # [B, d', h]
     # --- LSTM encoder -------------------------------------------------------

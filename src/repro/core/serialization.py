@@ -156,8 +156,8 @@ def _fill(template, buf: io.BytesIO, dtype):
 def _spec_from_factors(shape, factors: np.ndarray) -> FoldingSpec:
     d, d_prime = factors.shape
     strides = np.ones((d, d_prime), dtype=np.int64)
-    for l in range(d_prime - 2, -1, -1):
-        strides[:, l] = strides[:, l + 1] * factors[:, l + 1]
+    for j in range(d_prime - 2, -1, -1):
+        strides[:, j] = strides[:, j + 1] * factors[:, j + 1]
     fstrides = np.ones((d, d_prime), dtype=np.int64)
     for k in range(d - 2, -1, -1):
         fstrides[k, :] = fstrides[k + 1, :] * factors[k + 1, :]

@@ -27,11 +27,30 @@ byte budget (backpressure, not unbounded queues), and reassembles
 results in request order.  ``rebalance`` changes ring membership behind
 a drain barrier so zero in-flight tickets are lost, with a warm tile
 handoff so scale-up does not start from a cold cache.
+
+Members are location-transparent (``transport``): ``LocalTransport``
+wraps an in-process ``CodecService``; ``SocketTransport`` speaks a
+length-prefixed binary protocol to a ``repro.fleet.worker`` OS process,
+so the same fleet spans processes —
+
+    fleet = FleetFrontend(
+        ["w0", "w1"], transport_factory=lambda iid: SocketTransport.spawn(iid)
+    )
+
+— with identical (bit-exact) answers; a dead worker becomes a routed
+``excluded`` instance instead of a hang.
 """
 from repro.fleet.frontend import FleetFrontend
 from repro.fleet.metrics import CacheCounters, FleetMetrics, InstanceMetrics, collect
 from repro.fleet.rebalance import RebalanceReport, rebalance
 from repro.fleet.router import HashRing, PayloadRoute
+from repro.fleet.transport import (
+    LocalTransport,
+    RemoteError,
+    SocketTransport,
+    Transport,
+    TransportError,
+)
 
 __all__ = [
     "CacheCounters",
@@ -39,8 +58,13 @@ __all__ = [
     "FleetMetrics",
     "HashRing",
     "InstanceMetrics",
+    "LocalTransport",
     "PayloadRoute",
     "RebalanceReport",
+    "RemoteError",
+    "SocketTransport",
+    "Transport",
+    "TransportError",
     "collect",
     "rebalance",
 ]

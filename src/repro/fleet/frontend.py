@@ -1,12 +1,18 @@
-"""The fleet query frontend: N ``CodecService`` instances, one service.
+"""The fleet query frontend: N fleet members behind one service.
 
-Every instance mmaps the same container-v3 file (``load_stream``) but —
-via the :class:`~repro.serve.codec_service.Ownership` filter the router
+Each member sits behind a :class:`~repro.fleet.transport.Transport` —
+in-process (``LocalTransport`` wrapping a ``CodecService``) or a
+separate OS process (``SocketTransport`` to a ``repro.fleet.worker``).
+The frontend depends only on the protocol, so batch split/reassembly,
+the in-flight byte budget, the drain barrier, and warm tile handoff
+behave identically across both; every instance mmaps the same
+container-v3 file and — via the
+:class:`~repro.serve.codec_service.Ownership` filter the router
 installs — materializes and caches only its shard of chunks and decode
 tiles.  A ``decode_at`` batch is split by owner, fanned out through each
-instance's existing ``submit``/``flush`` coalescing path, and reassembled
-in request order, so a fleet answer is bit-identical to a single
-resident instance's.
+instance's submit/flush coalescing path (pipelined frames on a socket
+transport), and reassembled in request order, so a fleet answer is
+bit-identical to a single resident instance's.
 
 Admission control: ``max_inflight_bytes`` bounds the bytes (decoded
 output + index payload) queued on any one instance during a flush.  When
@@ -19,20 +25,36 @@ the ring; the frontend sends each group to whichever replica has the
 least bytes planned this flush, so hot chunks spread across their
 replica set.
 
+Failure containment: a dead transport (worker killed, request timeout,
+framing violation) raises ``TransportError`` exactly once — the frontend
+fails that flush's affected tickets cleanly, adds the instance to
+``excluded``, and routes every later query to surviving replicas.  A
+group whose replicas are ALL excluded fails its ticket with a clear
+error instead of hanging.  ``rebalance`` removes excluded members for
+real (ring change + retirement).
+
     fleet = FleetFrontend(4, cache_bytes=1 << 24, replication=1)
     fleet.load_stream("embed", "embed.tcdc", tile_entries=4096)
     fleet.decode_at("embed", idx)        # == single instance, bit-exact
+
+    # one worker process per member instead:
+    fleet = FleetFrontend(
+        ["w0", "w1"],
+        transport_factory=lambda iid: SocketTransport.spawn(iid),
+    )
 """
 from __future__ import annotations
 
 import collections
 import time
+from typing import Callable
 
 import numpy as np
 
 from repro.codecs import container
 from repro.codecs.indexing import validate_indices
 from repro.fleet.router import HashRing, PayloadRoute
+from repro.fleet.transport import LocalTransport, Transport, TransportError
 from repro.serve.codec_service import CodecService, Ownership
 
 #: fp64 output per decoded entry — the unit admission control budgets in
@@ -42,7 +64,7 @@ _OUT_BYTES_PER_ENTRY = 8
 class FleetFrontend:
     def __init__(
         self,
-        instances: int | list[str] | dict[str, CodecService] = 2,
+        instances: int | list[str] | dict[str, CodecService | Transport] = 2,
         *,
         cache_bytes: int | None = None,
         max_batch: int = 65536,
@@ -50,6 +72,7 @@ class FleetFrontend:
         vnodes: int = 64,
         max_inflight_bytes: int | None = None,
         latency_window: int = 2048,
+        transport_factory: Callable[[str], Transport] | None = None,
     ):
         if isinstance(instances, int):
             if instances < 1:
@@ -59,15 +82,26 @@ class FleetFrontend:
         self._max_batch = max_batch
         self.max_inflight_bytes = max_inflight_bytes
         self._latency_window = latency_window
+        self._transport_factory = transport_factory or (
+            lambda iid: LocalTransport(
+                iid, cache_bytes=cache_bytes, max_batch=max_batch
+            )
+        )
         if isinstance(instances, dict):
-            self.services: dict[str, CodecService] = dict(instances)
+            self.transports: dict[str, Transport] = {
+                iid: (
+                    LocalTransport(iid, service=t)
+                    if isinstance(t, CodecService)
+                    else t
+                )
+                for iid, t in instances.items()
+            }
         else:
-            self.services = {
-                iid: CodecService(max_batch=max_batch, cache_bytes=cache_bytes)
-                for iid in instances
+            self.transports = {
+                iid: self._transport_factory(iid) for iid in instances
             }
         self.ring = HashRing(
-            list(self.services), vnodes=vnodes, replication=replication
+            list(self.transports), vnodes=vnodes, replication=replication
         )
         self.routes: dict[str, PayloadRoute] = {}
         self._paths: dict[str, tuple[str, int | None]] = {}
@@ -83,17 +117,33 @@ class FleetFrontend:
         #: fleet tickets whose decode failed during the LAST flush
         self.failed: dict[int, Exception] = {}
         self.backpressure_flushes = 0
+        #: instances whose transport died — still fleet members (the ring
+        #: keeps them until a rebalance removes them) but excluded from
+        #: routing, so queries go to surviving replicas instead of hanging
+        self.excluded: set[str] = set()
+        #: instance -> the TransportError that excluded it
+        self.exclusion_errors: dict[str, TransportError] = {}
         self._latency: dict[str, collections.deque] = {
-            iid: collections.deque(maxlen=latency_window) for iid in self.services
+            iid: collections.deque(maxlen=latency_window) for iid in self.transports
         }
         #: monotonic per-instance flush counter (the latency deque is
         #: window-capped, so len() is not a flush count)
-        self._flush_counts: dict[str, int] = {iid: 0 for iid in self.services}
-        self._peak_inflight: dict[str, int] = {iid: 0 for iid in self.services}
+        self._flush_counts: dict[str, int] = {iid: 0 for iid in self.transports}
+        self._peak_inflight: dict[str, int] = {iid: 0 for iid in self.transports}
 
     # ------------------------------------------------------------------ admin
+    @property
+    def services(self) -> dict[str, CodecService]:
+        """In-process members' services (LocalTransport only) — a debug/
+        test convenience; fleet logic goes through ``transports``."""
+        return {
+            iid: t.service
+            for iid, t in self.transports.items()
+            if isinstance(t, LocalTransport)
+        }
+
     def instances(self) -> list[str]:
-        return sorted(self.services)
+        return sorted(self.transports)
 
     def payloads(self) -> list[str]:
         return sorted(self.routes)
@@ -103,33 +153,65 @@ class FleetFrontend:
         the rebalancer replays onto a joining instance."""
         return self._paths[name]
 
-    def spawn_instance(self, iid: str) -> CodecService:
-        """Build a service with this fleet's config and load every
-        registered payload on it.  Ring membership and ownership are NOT
-        touched — that is the rebalancer's job (drain barrier first)."""
-        if iid in self.services:
+    def exclude(self, iid: str, err: TransportError) -> None:
+        """Mark a member's transport dead: it stays on the ring (ownership
+        is a rebalance concern) but routing skips it from now on."""
+        if iid not in self.excluded:
+            self.excluded.add(iid)
+            self.exclusion_errors[iid] = err
+
+    def spawn_instance(self, iid: str) -> Transport:
+        """Build a member with this fleet's transport factory and load
+        every registered payload on it.  Ring membership and ownership are
+        NOT touched — that is the rebalancer's job (drain barrier first)."""
+        if iid in self.transports:
             raise ValueError(f"instance {iid!r} already exists")
-        svc = CodecService(max_batch=self._max_batch,
-                           cache_bytes=self._cache_bytes)
-        for name, (path, tile_entries) in self._paths.items():
-            svc.load_stream(name, path, tile_entries=tile_entries)
-        self.services[iid] = svc
+        t = self._transport_factory(iid)
+        try:
+            for name, (path, tile_entries) in self._paths.items():
+                t.load_stream(name, path, tile_entries=tile_entries)
+        except Exception:
+            # a failed replay must not leak the member (for a socket
+            # transport that is a live worker OS process)
+            try:
+                t.close()
+            except TransportError:
+                pass
+            raise
+        self.transports[iid] = t
         self._latency[iid] = collections.deque(maxlen=self._latency_window)
         self._flush_counts[iid] = 0
         self._peak_inflight[iid] = 0
-        return svc
+        return t
 
-    def retire_instance(self, iid: str) -> CodecService:
-        """Detach a service from the fleet (payloads unloaded, mmaps
-        released).  Ring membership must already have been updated and
-        in-flight work drained — the rebalancer sequences this."""
-        svc = self.services.pop(iid)
+    def retire_instance(self, iid: str) -> Transport:
+        """Detach a member from the fleet (payloads unloaded, worker shut
+        down).  Ring membership must already have been updated and
+        in-flight work drained — the rebalancer sequences this.  A dead
+        transport retires without a hang: the shutdown is best-effort."""
+        t = self.transports.pop(iid)
         self._latency.pop(iid, None)
         self._flush_counts.pop(iid, None)
         self._peak_inflight.pop(iid, None)
-        for name in list(svc.payloads()):
-            svc.unload(name)
-        return svc
+        self.excluded.discard(iid)
+        self.exclusion_errors.pop(iid, None)
+        try:
+            t.drain()
+            for name in list(t.payloads()):
+                t.unload(name)
+        except TransportError:
+            pass
+        t.close()
+        return t
+
+    def close(self) -> None:
+        """Shut down every member (terminates worker processes)."""
+        for iid in list(self.transports):
+            t = self.transports.pop(iid)
+            try:
+                t.close()
+            except TransportError:
+                pass
 
     def latency_seconds(self, iid: str) -> list[float]:
         """Wall seconds of this instance's most recent flushes (window-
@@ -150,13 +232,23 @@ class FleetFrontend:
         it lazily; the chunk index seeds the routing table; ownership
         filters shard materialization and tile caching across the ring."""
         codec_name, chunks = container.chunk_index(path)
+        live = [iid for iid in self.transports if iid not in self.excluded]
+        if not live:
+            raise TransportError(
+                f"cannot load {name!r}: every fleet member is excluded "
+                f"(dead instances: {sorted(self.excluded)})"
+            )
         try:
-            for svc in self.services.values():
-                svc.load_stream(name, path, tile_entries=tile_entries)
+            for iid in live:  # dead members get the payload at rebalance
+                self.transports[iid].load_stream(
+                    name, path, tile_entries=tile_entries
+                )
             # the chunk-0 primary is an owner either way — peeking the shape
-            # there materializes a body that instance would keep anyway
-            primary = self.ring.owner(f"{name}/c0")
-            shape = self.services[primary].shape_of(name)
+            # there materializes a body that instance would keep anyway;
+            # fall back to any live member when the primary's transport died
+            candidates = self.ring.owners(f"{name}/c0", len(self.transports))
+            primary = next((i for i in candidates if i in live), live[0])
+            shape = self.transports[primary].shape_of(name)
             route = PayloadRoute(name, shape, chunks, tile_entries)
         except Exception:
             # nothing half-registered: a corrupt chunk discovered at the
@@ -164,8 +256,11 @@ class FleetFrontend:
             # and a failed RE-load must not keep the replaced payload's
             # stale route/path either (the instances' registrations are
             # already gone)
-            for svc in self.services.values():
-                svc.unload(name)
+            for t in self.transports.values():
+                try:
+                    t.unload(name)
+                except TransportError:
+                    pass
             self.routes.pop(name, None)
             self._paths.pop(name, None)
             raise
@@ -178,27 +273,35 @@ class FleetFrontend:
         self.routes.pop(name, None)
         self._paths.pop(name, None)
         self._group_owners.pop(name, None)
-        for svc in self.services.values():
-            svc.unload(name)
+        for iid, t in self.transports.items():
+            try:
+                t.unload(name)
+            except TransportError as e:
+                self.exclude(iid, e)
 
     def apply_ownership(self, name: str) -> None:
         """(Re-)install each instance's ownership filter for a payload
         from the CURRENT ring — called at load and after every rebalance.
-        One ring enumeration serves all instances; a service not on the
+        One ring enumeration serves all instances; a member not on the
         ring (a leaver awaiting retirement) owns nothing."""
         route = self.routes[name]
         maps = route.owner_maps(self.ring)
         chunk_tbl, tile_tbl = route.ownership_tables(self.ring, maps)
-        for iid, svc in self.services.items():
-            svc.set_ownership(
-                name,
-                Ownership(
-                    chunk_ids=chunk_tbl.get(iid, frozenset()),
-                    tile_ids=(
-                        tile_tbl.get(iid, frozenset()) if route.tiled else None
+        for iid, t in self.transports.items():
+            if iid in self.excluded:
+                continue  # dead transport; rebalance retires it for real
+            try:
+                t.set_ownership(
+                    name,
+                    Ownership(
+                        chunk_ids=chunk_tbl.get(iid, frozenset()),
+                        tile_ids=(
+                            tile_tbl.get(iid, frozenset()) if route.tiled else None
+                        ),
                     ),
-                ),
-            )
+                )
+            except TransportError as e:
+                self.exclude(iid, e)
         # hot-path routing table: group id -> replica list (primary first),
         # so flush() pays a dict lookup per group, not a ring hash
         self._group_owners[name] = maps[1] if route.tiled else maps[0]
@@ -254,8 +357,8 @@ class FleetFrontend:
     # ----------------------------------------------------------------- flush
     def flush(self) -> dict[int, np.ndarray]:
         """Resolve all queued tickets: one owner-split plan, one
-        coalesced submit/flush round per instance (admission-controlled),
-        then per-ticket reassembly in request order."""
+        coalesced submit/flush round per live instance (admission-
+        controlled), then per-ticket reassembly in request order."""
         # failures resolved early (drain/decode_at) are reported exactly
         # once, by this flush — mirroring how _drained delivers results
         self.failed = self._pending_failed
@@ -265,9 +368,9 @@ class FleetFrontend:
         queue, self._queue = self._queue, []
         # plan: per instance, (ticket, name, sub-indices, output positions)
         plan: dict[str, list[tuple[int, str, np.ndarray, np.ndarray]]] = {
-            iid: [] for iid in self.services
+            iid: [] for iid in self.transports
         }
-        planned_bytes = dict.fromkeys(self.services, 0)
+        planned_bytes = dict.fromkeys(self.transports, 0)
         for ticket, name, idx in queue:
             route = self.routes.get(name)
             if route is None:  # unloaded between submit and flush
@@ -281,14 +384,26 @@ class FleetFrontend:
             counts = np.bincount(inv, minlength=len(uniq))
             group_owners = self._group_owners[name]
             owner_by_gid = np.empty(len(uniq), dtype=object)
+            unroutable: int | None = None
             for k, gid in enumerate(uniq):
-                replicas = group_owners[int(gid)]
+                replicas = [
+                    r for r in group_owners[int(gid)] if r not in self.excluded
+                ]
+                if not replicas:
+                    unroutable = int(gid)
+                    break
                 # ties go to the first (primary) replica — min() keeps
                 # the earliest element among equals
                 owner_by_gid[k] = min(replicas, key=planned_bytes.__getitem__)
                 planned_bytes[owner_by_gid[k]] += (
                     int(counts[k]) * _OUT_BYTES_PER_ENTRY
                 )
+            if unroutable is not None:
+                self.failed[ticket] = TransportError(
+                    f"payload {name!r} group {unroutable}: every replica is "
+                    f"excluded (dead instances: {sorted(self.excluded)})"
+                )
+                continue
             owners = owner_by_gid[inv]
             for iid in np.unique(owners):
                 pos = np.nonzero(owners == iid)[0]
@@ -321,42 +436,47 @@ class FleetFrontend:
         parts: dict[int, list[tuple[np.ndarray, np.ndarray]]],
         part_failed: dict[int, Exception],
     ) -> None:
-        """Submit this instance's sub-batches through its coalescing path,
-        flushing early whenever the in-flight byte budget would overflow."""
-        svc = self.services[iid]
-        pending: list[tuple[int, int, np.ndarray]] = []  # (ticket, svc ticket, pos)
+        """Submit this instance's sub-batches through its transport's
+        coalescing path, flushing early whenever the in-flight byte budget
+        would overflow.  A transport death mid-batch fails the unresolved
+        tickets cleanly and excludes the instance from future routing."""
+        t = self.transports[iid]
+        pending: list[tuple[int, int, np.ndarray]] = []  # (ticket, rid, pos)
         inflight = 0
-        for ticket, name, sub_idx, pos in items:
-            cost = sub_idx.shape[0] * _OUT_BYTES_PER_ENTRY + sub_idx.nbytes
-            if (
-                self.max_inflight_bytes is not None
-                and pending
-                and inflight + cost > self.max_inflight_bytes
-            ):
-                self.backpressure_flushes += 1
-                self._flush_instance(iid, svc, pending, parts, part_failed)
-                pending, inflight = [], 0
-            try:
-                svc_ticket = svc.submit(name, sub_idx)
-            except Exception as e:  # noqa: BLE001 — isolate this part
-                part_failed[ticket] = e
-                continue
-            pending.append((ticket, svc_ticket, pos))
-            inflight += cost
-            self._peak_inflight[iid] = max(self._peak_inflight[iid], inflight)
-        if pending:
-            self._flush_instance(iid, svc, pending, parts, part_failed)
+        resolved: set[int] = set()  # tickets answered by an early flush
+        try:
+            for ticket, name, sub_idx, pos in items:
+                cost = sub_idx.shape[0] * _OUT_BYTES_PER_ENTRY + sub_idx.nbytes
+                if (
+                    self.max_inflight_bytes is not None
+                    and pending
+                    and inflight + cost > self.max_inflight_bytes
+                ):
+                    self.backpressure_flushes += 1
+                    self._flush_instance(iid, t, pending, parts, part_failed)
+                    resolved.update(p[0] for p in pending)
+                    pending, inflight = [], 0
+                rid = t.submit(name, sub_idx)
+                pending.append((ticket, rid, pos))
+                inflight += cost
+                self._peak_inflight[iid] = max(self._peak_inflight[iid], inflight)
+            if pending:
+                self._flush_instance(iid, t, pending, parts, part_failed)
+        except TransportError as e:
+            self.exclude(iid, e)
+            for ticket, *_ in items:
+                if ticket not in resolved:
+                    part_failed[ticket] = e
 
-    def _flush_instance(self, iid, svc, pending, parts, part_failed) -> None:
+    def _flush_instance(self, iid, transport, pending, parts, part_failed) -> None:
         t0 = time.perf_counter()
-        out = svc.flush()
+        results, failures = transport.flush()
         self._latency[iid].append(time.perf_counter() - t0)
         self._flush_counts[iid] += 1
-        for ticket, svc_ticket, pos in pending:
-            if svc_ticket in out:
-                parts.setdefault(ticket, []).append((pos, out[svc_ticket]))
+        for ticket, rid, pos in pending:
+            if rid in results:
+                parts.setdefault(ticket, []).append((pos, results[rid]))
             else:
-                part_failed[ticket] = svc.failed.get(
-                    svc_ticket,
-                    RuntimeError(f"instance {iid}: ticket vanished"),
+                part_failed[ticket] = failures.get(
+                    rid, RuntimeError(f"instance {iid}: ticket vanished")
                 )

@@ -1,11 +1,13 @@
 """Fleet-wide observability: roll up per-instance cache stats + latency.
 
-``collect`` snapshots every instance's ``cache_stats`` (hits / misses /
-evictions / resident bytes, with the per-payload breakdown the serve
-layer now keeps), the admission-control gauges, and p50/p99 decode
-latency from the frontend's per-instance flush timings, then totals
-them fleet-wide.  ``as_dict`` renders the snapshot JSON-able — the shape
-``benchmarks/fleet_bench.py`` writes into ``BENCH_fleet.json``.
+``collect`` snapshots every live instance's cache stats through its
+:class:`~repro.fleet.transport.Transport` (``stats()`` returns the same
+JSON-able dict for an in-process service and a worker process — the
+serve layer's ``CacheStats.as_dict``), the admission-control gauges, and
+p50/p99 decode latency from the frontend's per-instance flush timings,
+then totals them fleet-wide.  Excluded (dead-transport) members are
+listed, not polled.  ``as_dict`` renders the snapshot JSON-able — the
+shape ``benchmarks/fleet_bench.py`` writes into ``BENCH_fleet.json``.
 """
 from __future__ import annotations
 
@@ -14,6 +16,7 @@ import dataclasses
 import numpy as np
 
 from repro.fleet.frontend import FleetFrontend
+from repro.fleet.transport import TransportError
 from repro.serve.codec_service import PayloadCacheStats
 
 
@@ -34,6 +37,13 @@ class CacheCounters(PayloadCacheStats):
 
     @classmethod
     def of(cls, counters) -> "CacheCounters":
+        if isinstance(counters, dict):  # a transport's wire snapshot
+            return cls(
+                counters["hits"],
+                counters["misses"],
+                counters["evictions"],
+                counters["resident_bytes"],
+            )
         return cls(counters.hits, counters.misses, counters.evictions,
                    counters.resident_bytes)
 
@@ -52,9 +62,11 @@ class InstanceMetrics:
 @dataclasses.dataclass
 class FleetMetrics:
     instances: dict[str, InstanceMetrics]
-    fleet: CacheCounters            # totals across instances
+    fleet: CacheCounters            # totals across live instances
     per_payload: dict[str, CacheCounters]  # fleet totals by payload
     backpressure_flushes: int
+    #: members whose transport died — still on the ring, not polled
+    excluded: list[str] = dataclasses.field(default_factory=list)
 
     def as_dict(self) -> dict:
         def counters(c: CacheCounters) -> dict:
@@ -68,6 +80,7 @@ class FleetMetrics:
             "fleet": counters(self.fleet),
             "per_payload": {k: counters(v) for k, v in self.per_payload.items()},
             "backpressure_flushes": self.backpressure_flushes,
+            "excluded": list(self.excluded),
             "instances": {
                 iid: {
                     "cache": counters(m.cache),
@@ -95,11 +108,17 @@ def collect(fleet: FleetFrontend) -> FleetMetrics:
     fleet_total = CacheCounters()
     fleet_per_payload: dict[str, CacheCounters] = {}
     for iid in fleet.instances():
-        svc = fleet.services[iid]
-        stats = svc.cache_stats
+        if iid in fleet.excluded:
+            continue
+        try:
+            stats = fleet.transports[iid].stats()
+        except TransportError as e:
+            fleet.exclude(iid, e)
+            continue
         cache = CacheCounters.of(stats)
         per_payload = {
-            name: CacheCounters.of(p) for name, p in stats.per_payload.items()
+            name: CacheCounters.of(p)
+            for name, p in stats["per_payload"].items()
         }
         lat = fleet.latency_seconds(iid)
         instances[iid] = InstanceMetrics(
@@ -119,4 +138,5 @@ def collect(fleet: FleetFrontend) -> FleetMetrics:
         fleet=fleet_total,
         per_payload=fleet_per_payload,
         backpressure_flushes=fleet.backpressure_flushes,
+        excluded=sorted(fleet.excluded),
     )

@@ -13,16 +13,25 @@ The sequence for any membership change:
 4. Warm handoff (``warm=True``): decode tiles whose ownership moved are
    copied from the old owner's cache into the new owner's (through the
    byte-budgeted ``admit_tile`` path) before the old owner drops them —
-   a scale-up starts with a warm cache instead of a miss storm.
+   a scale-up starts with a warm cache instead of a miss storm.  Across
+   processes the tiles ride the transport's array encoding, so a socket
+   fleet warms exactly like an in-process one.
 5. Evicted owners drop cache bytes under the existing LRU accounting
    (``drop_unowned``), and departed instances are retired (payloads
-   unloaded, mmaps released).
+   unloaded, worker processes shut down).
+
+Everything goes through the :class:`~repro.fleet.transport.Transport`
+protocol.  A member whose transport died (``fleet.excluded``) neither
+contributes warm tiles nor receives any — removing it through
+``rebalance(fleet, remove=[iid])`` is how a dead worker leaves the fleet
+for real.
 """
 from __future__ import annotations
 
 import dataclasses
 
 from repro.fleet.frontend import FleetFrontend
+from repro.fleet.transport import TransportError
 
 
 @dataclasses.dataclass
@@ -67,28 +76,33 @@ def rebalance(
     """Apply a membership change; see the module docstring for semantics."""
     add, remove = list(add), list(remove)
     for iid in add:
-        if iid in fleet.services:
+        if iid in fleet.transports:
             raise ValueError(f"cannot add {iid!r}: already in the fleet")
     for iid in remove:
-        if iid not in fleet.services:
+        if iid not in fleet.transports:
             raise KeyError(f"cannot remove {iid!r}: not in the fleet")
-    if set(fleet.services) - set(remove) | set(add) == set() :
+    if set(fleet.transports) - set(remove) | set(add) == set():
         raise ValueError("rebalance would leave an empty fleet")
 
     # 1. barrier — in-flight tickets resolve under the old epoch
     fleet.drain()
     before = _ownership_snapshot(fleet)
 
-    # warm-handoff source: cached tiles of every current instance (the
-    # departing ones' caches are exactly what must not go cold)
+    # warm-handoff source: cached tiles of every current live instance
+    # (the departing ones' caches are exactly what must not go cold)
     tile_cache: dict[str, dict[int, object]] = {}
     if warm:
         for name, route in fleet.routes.items():
             if not route.tiled:
                 continue
             merged: dict[int, object] = {}
-            for svc in fleet.services.values():
-                merged.update(svc.export_tiles(name))
+            for iid, t in fleet.transports.items():
+                if iid in fleet.excluded:
+                    continue  # a dead worker's cache is unreadable
+                try:
+                    merged.update(t.export_tiles(name))
+                except TransportError as e:
+                    fleet.exclude(iid, e)
             tile_cache[name] = merged
 
     # 2. ring mutation — spawn joiners first so they can serve immediately
@@ -132,15 +146,25 @@ def rebalance(
                     tid, frozenset()
                 )
                 for iid in gained:
-                    if fleet.services[iid].admit_tile(name, tid, values):
-                        n += 1
+                    if iid in fleet.excluded:
+                        continue
+                    try:
+                        if fleet.transports[iid].admit_tile(name, tid, values):
+                            n += 1
+                    except TransportError as e:
+                        fleet.exclude(iid, e)
             tiles_warmed[name] = n
 
     # 5. evicted owners drop cache bytes; departed instances retire
     bytes_dropped = 0
     for name in fleet.routes:
         for iid in list(fleet.ring.instances):
-            bytes_dropped += fleet.services[iid].drop_unowned(name)
+            if iid in fleet.excluded:
+                continue
+            try:
+                bytes_dropped += fleet.transports[iid].drop_unowned(name)
+            except TransportError as e:
+                fleet.exclude(iid, e)
     for iid in remove:
         fleet.retire_instance(iid)
 

@@ -1,0 +1,224 @@
+"""``python -m repro.fleet.worker`` — one fleet member as an OS process.
+
+The worker binds a TCP or Unix socket, accepts ONE frontend connection,
+and runs one owned :class:`~repro.serve.codec_service.CodecService` that
+mmaps whatever shared container-v3 files the frontend registers over the
+wire (``OP_LOAD`` carries a *path*, never payload bytes — workers on the
+same host share the page cache, workers across hosts need a shared
+filesystem).  It answers the transport protocol defined in
+``repro.fleet.transport``:
+
+- pipelined ``OP_SUBMIT`` frames queue requests on the service (submit-
+  time errors are held and reported at the next flush, keyed by the
+  frontend's request id);
+- ``OP_FLUSH`` resolves everything queued through the service's
+  coalescing path and answers every outstanding request id exactly once
+  — result array or error string — in request-id order;
+- the rebalance verbs (``OP_SET_OWNERSHIP``/``OP_EXPORT_TILES``/
+  ``OP_ADMIT_TILE``/``OP_DROP_UNOWNED``) make cross-process warm
+  handoff work identically to the in-process path.
+
+The worker exits when the frontend disconnects (EOF), on ``OP_SHUTDOWN``,
+or on a framing violation (a truncated or oversized frame is a protocol
+error — the worker answers nothing it cannot parse and closes, so the
+frontend's timeout converts it into an excluded instance instead of a
+hang).
+
+    python -m repro.fleet.worker --listen unix:/tmp/pod0.sock
+    python -m repro.fleet.worker --listen tcp:127.0.0.1:7070 --cache-bytes 268435456
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import struct
+import sys
+
+from repro.fleet.transport import (
+    OP_ADMIT_TILE,
+    OP_DROP_UNOWNED,
+    OP_EXPORT_TILES,
+    OP_FLUSH,
+    OP_LOAD,
+    OP_PAYLOADS,
+    OP_PING,
+    OP_SET_OWNERSHIP,
+    OP_SHAPE,
+    OP_SHUTDOWN,
+    OP_STATS,
+    OP_SUBMIT,
+    OP_UNLOAD,
+    ProtocolError,
+    Reader,
+    ST_ERROR,
+    ST_OK,
+    Writer,
+    parse_address,
+    recv_frame,
+    send_frame,
+    unpack_ownership,
+)
+from repro.serve.codec_service import CodecService
+
+
+class WorkerState:
+    """One connection's request state: the owned service plus the
+    pipelined submits awaiting the next flush."""
+
+    def __init__(self, service: CodecService):
+        self.service = service
+        #: request id -> service ticket, in arrival order
+        self.pending: dict[int, int] = {}
+        #: request id -> submit-time error message, reported at flush
+        self.deferred: dict[int, str] = {}
+        self.shutdown = False
+
+
+def _handle(state: WorkerState, op: int, rid: int, r: Reader) -> bytes | None:
+    """Dispatch one request; returns the OK-response body, or None for
+    pipelined ops that answer nothing until flush."""
+    svc = state.service
+    if op == OP_PING:
+        return b""
+    if op == OP_LOAD:
+        name, path, tile = r.str(), r.str(), r.i64()
+        svc.load_stream(name, path, tile_entries=None if tile < 0 else tile)
+        return b""
+    if op == OP_UNLOAD:
+        svc.unload(r.str())
+        return b""
+    if op == OP_SHAPE:
+        shape = svc.shape_of(r.str())
+        w = Writer().u8(len(shape))
+        for s in shape:
+            w.u64(int(s))
+        return w.bytes()
+    if op == OP_SUBMIT:
+        name = r.str()
+        try:
+            state.pending[rid] = svc.submit(name, r.array())
+        except Exception as e:  # noqa: BLE001 — deferred to flush, per protocol
+            state.deferred[rid] = f"{type(e).__name__}: {e}"
+        return None
+    if op == OP_FLUSH:
+        out = svc.flush()
+        results: list[tuple[int, object]] = []
+        failures: list[tuple[int, str]] = list(state.deferred.items())
+        for srid, ticket in state.pending.items():
+            if ticket in out:
+                results.append((srid, out[ticket]))
+            else:
+                err = svc.failed.get(ticket)
+                failures.append(
+                    (srid, f"{type(err).__name__}: {err}" if err else "ticket vanished")
+                )
+        state.pending = {}
+        state.deferred = {}
+        w = Writer().u32(len(results))
+        for srid, values in sorted(results, key=lambda t: t[0]):
+            w.u64(srid).array(values)
+        w.u32(len(failures))
+        for srid, msg in sorted(failures, key=lambda t: t[0]):
+            w.u64(srid).str(msg)
+        return w.bytes()
+    if op == OP_STATS:
+        return Writer().blob(
+            json.dumps(svc.cache_stats.as_dict()).encode("utf-8")
+        ).bytes()
+    if op == OP_SET_OWNERSHIP:
+        name = r.str()
+        svc.set_ownership(name, unpack_ownership(r))
+        return b""
+    if op == OP_EXPORT_TILES:
+        tiles = svc.export_tiles(r.str())
+        w = Writer().u32(len(tiles))
+        for tid, values in tiles.items():
+            w.u64(int(tid)).array(values)
+        return w.bytes()
+    if op == OP_ADMIT_TILE:
+        name, tid = r.str(), r.u64()
+        return Writer().u8(1 if svc.admit_tile(name, tid, r.array()) else 0).bytes()
+    if op == OP_DROP_UNOWNED:
+        return Writer().u64(svc.drop_unowned(r.str())).bytes()
+    if op == OP_PAYLOADS:
+        names = svc.payloads()
+        w = Writer().u16(len(names))
+        for name in names:
+            w.str(name)
+        return w.bytes()
+    if op == OP_SHUTDOWN:
+        state.shutdown = True
+        return b""
+    raise ProtocolError(f"unknown opcode {op}")
+
+
+def serve_connection(conn: socket.socket, service: CodecService) -> None:
+    """Run the request loop until EOF, shutdown, or a framing violation."""
+    state = WorkerState(service)
+    while not state.shutdown:
+        try:
+            payload = recv_frame(conn)
+        except ProtocolError as e:
+            # half a frame is unanswerable (no parseable rid) — log, close
+            print(f"repro.fleet.worker: protocol error: {e}", file=sys.stderr)
+            return
+        if payload is None:  # frontend disconnected
+            return
+        if len(payload) < 9:
+            print("repro.fleet.worker: short request frame", file=sys.stderr)
+            return
+        op, rid = struct.unpack("<BQ", payload[:9])
+        try:
+            body = _handle(state, op, rid, Reader(payload[9:]))
+        except ProtocolError as e:
+            print(f"repro.fleet.worker: protocol error: {e}", file=sys.stderr)
+            return
+        except Exception as e:  # noqa: BLE001 — service error -> error response
+            msg = f"{type(e).__name__}: {e}"
+            send_frame(conn, struct.pack("<BQ", ST_ERROR, rid) + Writer().str(msg).bytes())
+            continue
+        if body is not None:
+            send_frame(conn, struct.pack("<BQ", ST_OK, rid) + body)
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="repro.fleet.worker",
+        description="one fleet member: a CodecService behind a socket",
+    )
+    parser.add_argument(
+        "--listen", required=True, help="unix:/path or tcp:host:port (port 0 = ephemeral)"
+    )
+    parser.add_argument("--cache-bytes", type=int, default=None)
+    parser.add_argument("--max-batch", type=int, default=65536)
+    args = parser.parse_args(argv)
+
+    family, addr = parse_address(args.listen)
+    sock = socket.socket(family, socket.SOCK_STREAM)
+    if family == socket.AF_INET:
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    sock.bind(addr)
+    sock.listen(1)
+    bound = sock.getsockname()
+    shown = f"tcp:{bound[0]}:{bound[1]}" if family == socket.AF_INET else f"unix:{bound}"
+    print(f"READY {shown}", flush=True)
+
+    service = CodecService(max_batch=args.max_batch, cache_bytes=args.cache_bytes)
+    try:
+        conn, _ = sock.accept()
+        with conn:
+            serve_connection(conn, service)
+    finally:
+        sock.close()
+        if family == socket.AF_UNIX:
+            try:
+                os.unlink(addr)
+            except OSError:
+                pass
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

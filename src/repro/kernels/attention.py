@@ -64,9 +64,9 @@ def _kernel(
 
     @pl.when(ki == nk - 1)
     def _finish():
-        l = l_scr[...]
-        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
-        o_ref[0, :, 0, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+        denom = l_scr[...]
+        denom = jnp.where(denom == 0.0, 1.0, denom)  # fully-masked rows -> 0 output
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
 @functools.partial(
@@ -93,7 +93,7 @@ def flash_attention(
     grid = (bsz * hq, sq // tile_q, skv // tile_kv)
     scale = 1.0 / (dim**0.5)
 
-    kv_index = lambda bh, qi, ki: (bh // hq, ki, (bh % hq) // group, 0)
+    kv_index = lambda bh, qi, ki: (bh // hq, ki, (bh % hq) // group, 0)  # noqa: E731
     return pl.pallas_call(
         functools.partial(
             _kernel,

@@ -12,8 +12,6 @@ divisibility.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -57,8 +55,8 @@ def tt_contract(
     tile = tile_b or min(_tt.DEFAULT_TILE_B, max(8, first.shape[0]))
     f, bsz = _pad_batch(first, tile)
     m, _ = _pad_batch(mid, tile)
-    l, _ = _pad_batch(last, tile)
-    out = _tt.tt_contract(f, m, l, tile_b=tile, interpret=impl == "pallas_interpret")
+    lp, _ = _pad_batch(last, tile)
+    out = _tt.tt_contract(f, m, lp, tile_b=tile, interpret=impl == "pallas_interpret")
     return out[:bsz]
 
 

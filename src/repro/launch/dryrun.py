@@ -56,7 +56,9 @@ _COLL_FACTOR = {
     "collective-permute": 1.0,
 }
 
-_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred|c64|c128)\[([\d,]*)\]")
+_SHAPE_RE = re.compile(
+    r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred|c64|c128)\[([\d,]*)\]"
+)
 _COLL_RE = re.compile(
     r"=\s*(\([^)]*\)|\S+)\s+"
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
@@ -263,7 +265,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, rules_name: str = "base
     t_cost = time.time() - t0
     nb = cfg.n_blocks
     span = d_hi - d_lo
-    extrap = lambda v2, v4: v2 + (nb - d_lo) * (v4 - v2) / span
+    extrap = lambda v2, v4: v2 + (nb - d_lo) * (v4 - v2) / span  # noqa: E731
     flops_dev = extrap(f2, f4)
     bytes_dev = extrap(b2, b4)
     coll = {k: extrap(c2[k], c4[k]) for k in c2}

@@ -13,9 +13,7 @@ NTTD-compressed checkpoint export.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import signal
-import sys
 import time
 
 import jax
@@ -25,8 +23,7 @@ import numpy as np
 from repro import configs
 from repro.data.pipeline import PipelineConfig, SyntheticSource
 from repro.dist import sharding
-from repro.launch import mesh as mesh_lib
-from repro.models import layers, model
+from repro.models import model
 from repro.optim import optimizers, schedules
 from repro.train import checkpoint as ckpt_lib
 from repro.train import step as step_lib
@@ -65,7 +62,8 @@ def main(argv=None):
     ap.add_argument("--grad-compress", default="none", choices=["none", "int8", "topk"])
     ap.add_argument("--data", default=None, help="path to int32 token file (mmap)")
     ap.add_argument("--log-every", type=int, default=10)
-    ap.add_argument("--mesh", default=None, help="DxM, e.g. 2x2 (default: all devices data-parallel)")
+    ap.add_argument("--mesh", default=None,
+                    help="DxM, e.g. 2x2 (default: all devices data-parallel)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -115,12 +113,12 @@ def main(argv=None):
                 def loss(p):
                     return model.loss_fn(p, cfg, batch)
 
-                (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+                (loss_val, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
                 grads, comp_state = comp.transform(grads, comp_state)
                 updates, opt_state = opt.update(grads, opt_state, params)
                 params = optimizers.apply_updates(params, updates)
                 m = dict(metrics)
-                m["loss"] = l
+                m["loss"] = loss_val
                 return params, opt_state, comp_state, m
 
             train_step = jax.jit(step_with_comp, donate_argnums=(0, 1, 2))

@@ -14,7 +14,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.dist import sharding
@@ -123,8 +122,6 @@ def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
     if not active_only or not cfg.moe_experts:
         return total
     # active = total - (inactive experts' weights)
-    from repro.models import moe as moe_lib
-
     layout = transformer.block_layout(cfg)
     n_moe = sum(1 for _, f in layout if f == "moe") * cfg.n_blocks
     per_expert = 3 * cfg.d_model * cfg.d_ff

@@ -22,7 +22,6 @@ import numpy as np
 
 from repro.core import codec as codec_lib
 from repro.core import nttd
-from repro.core.folding import FoldingSpec
 
 
 @dataclasses.dataclass

@@ -18,7 +18,6 @@ independent of depth).  ``cfg.remat`` wraps the scan body in
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

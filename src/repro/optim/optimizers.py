@@ -51,7 +51,7 @@ def adamw(
     sched: Schedule = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
 
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
         return AdamState(
             step=jnp.zeros((), jnp.int32),
             mu=jax.tree.map(zeros, params),

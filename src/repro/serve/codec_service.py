@@ -95,6 +95,27 @@ class CacheStats:
         self.misses += 1
         self.for_payload(name).misses += 1
 
+    def as_dict(self) -> dict:
+        """JSON-able snapshot — the shape the fleet transport layer ships
+        across process boundaries (``Transport.stats``) and the metrics
+        roll-up consumes, so remote and in-process instances report
+        identically."""
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "resident_bytes": self.resident_bytes,
+            "per_payload": {
+                name: {
+                    "hits": p.hits,
+                    "misses": p.misses,
+                    "evictions": p.evictions,
+                    "resident_bytes": p.resident_bytes,
+                }
+                for name, p in self.per_payload.items()
+            },
+        }
+
 
 class NotOwnedError(KeyError):
     """Raised when a query lands on an instance whose ownership filter

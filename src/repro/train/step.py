@@ -6,7 +6,6 @@ lowers exactly the program production would run.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax
@@ -113,7 +112,9 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
 
 def abstract_opt_state(cfg: ModelConfig) -> AdamState:
     ab = model.abstract_params(cfg)
-    f32 = lambda t: jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    f32 = lambda t: jax.tree.map(  # noqa: E731
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t
+    )
     return AdamState(
         step=jax.ShapeDtypeStruct((), jnp.int32), mu=f32(ab), nu=f32(ab)
     )

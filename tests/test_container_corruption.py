@@ -1,0 +1,97 @@
+"""One canonical corruption recipe per container-v3 failure mode, shared
+by the load_stream (test_stream) and fleet (test_fleet) integrity tests
+so a footer-layout change cannot silently de-fang one suite — plus the
+recipes' own tests, so this file is COLLECTED by pytest (it used to be
+``container_corruption.py``, which matched no test pattern and never
+ran on its own)."""
+import struct
+
+import numpy as np
+import pytest
+
+from repro.codecs import container, get_codec
+from repro.stream import write_chunked
+
+
+def corrupt_chunk_byte(path: str, out: str) -> None:
+    """Flip one byte inside the first chunk's body (CRC must catch it)."""
+    blob = bytearray(open(path, "rb").read())
+    _, chunks = container.chunk_index(path)
+    blob[chunks[0].offset] ^= 0xFF
+    open(out, "wb").write(bytes(blob))
+
+
+def truncate_footer(path: str, out: str) -> None:
+    blob = open(path, "rb").read()
+    open(out, "wb").write(blob[:-6])
+
+
+def index_past_eof(path: str, out: str) -> None:
+    """Rewrite the footer so one chunk's extent points past EOF."""
+    blob = open(path, "rb").read()
+    _, chunks = container.chunk_index(path)
+    bad = [
+        container.ChunkEntry(c.offset, c.length + (1 << 20) * (i == 0), c.crc)
+        for i, c in enumerate(chunks)
+    ]
+    (footer_len,) = struct.unpack("<Q", blob[-12:-4])
+    body_end = len(blob) - 12 - footer_len
+    open(out, "wb").write(blob[:body_end] + container.pack_footer(bad))
+
+
+# ---------------------------------------------------------------------------
+# the recipes' own tests (tier-1 collects these directly)
+# ---------------------------------------------------------------------------
+RECIPES = {
+    "corrupt_chunk_byte": (corrupt_chunk_byte, "chunk checksum"),
+    "truncate_footer": (truncate_footer, "truncated|footer"),
+    "index_past_eof": (index_past_eof, "outside data region"),
+}
+
+
+@pytest.fixture(scope="module")
+def clean_path(tmp_path_factory):
+    rng = np.random.default_rng(0)
+    x = rng.random((16, 8, 8)).astype(np.float32)
+    enc = get_codec("ttd").fit(x, max_rank=3)
+    path = str(tmp_path_factory.mktemp("corruption") / "clean.tcdc")
+    write_chunked(path, enc, chunk_bytes=512)
+    return path
+
+
+def test_clean_file_loads(clean_path):
+    enc = container.load_file(clean_path)
+    assert enc.codec_name == "ttd"
+
+
+@pytest.mark.parametrize("recipe", sorted(RECIPES))
+def test_recipe_mutates_the_file(clean_path, tmp_path, recipe):
+    corruptor, _ = RECIPES[recipe]
+    bad = str(tmp_path / f"{recipe}.tcdc")
+    corruptor(clean_path, bad)
+    assert open(bad, "rb").read() != open(clean_path, "rb").read()
+
+
+@pytest.mark.parametrize("recipe", sorted(RECIPES))
+def test_recipe_is_rejected_by_monolithic_load(clean_path, tmp_path, recipe):
+    corruptor, match = RECIPES[recipe]
+    bad = str(tmp_path / f"{recipe}.tcdc")
+    corruptor(clean_path, bad)
+    with pytest.raises(ValueError, match=match):
+        container.load_file(bad)
+
+
+@pytest.mark.parametrize("recipe", sorted(RECIPES))
+def test_recipe_is_rejected_by_lazy_open_or_read(clean_path, tmp_path, recipe):
+    """The lazy path defers chunk reads; corruption must surface by the
+    time chunk bytes are actually materialized."""
+    corruptor, match = RECIPES[recipe]
+    bad = str(tmp_path / f"{recipe}.tcdc")
+    corruptor(clean_path, bad)
+    with pytest.raises(ValueError, match=match):
+        name, chunks, view = container.open_chunks(bad)
+        try:
+            for c in chunks:
+                container.read_chunk(view, c)
+        finally:
+            view.release()

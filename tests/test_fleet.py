@@ -3,8 +3,7 @@ warm rebalancing, metrics roll-up, and container integrity on the fleet
 path."""
 import numpy as np
 import pytest
-
-import container_corruption
+import test_container_corruption as container_corruption
 
 from repro.codecs import container, get_codec
 from repro.fleet import FleetFrontend, HashRing, PayloadRoute, collect, rebalance

@@ -1,8 +1,6 @@
 """Per-kernel validation: Pallas (interpret=True) vs the ref.py oracles,
 swept over shapes and dtypes (the property-sweep substitute for hypothesis,
 which is unavailable offline)."""
-import itertools
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -25,9 +23,9 @@ def test_tt_contract_sweep(b, k, r, dtype):
     f = jnp.asarray(RNG.normal(size=(b, r)), dtype)
     # keep the chain product O(1) so bf16 tolerances are meaningful
     m = jnp.asarray(RNG.normal(size=(b, k, r, r)) * (0.5 / np.sqrt(r)), dtype)
-    l = jnp.asarray(RNG.normal(size=(b, r)), dtype)
-    want = ops.tt_contract(f, m, l, impl="ref")
-    got = ops.tt_contract(f, m, l, impl="pallas_interpret", tile_b=32)
+    last = jnp.asarray(RNG.normal(size=(b, r)), dtype)
+    want = ops.tt_contract(f, m, last, impl="ref")
+    got = ops.tt_contract(f, m, last, impl="pallas_interpret", tile_b=32)
     tol = 1e-5 if dtype == jnp.float32 else 0.15
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol

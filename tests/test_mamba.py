@@ -1,6 +1,5 @@
 """Mamba2 SSD: chunked parallel form == exact recurrence (state-space
 duality), padding exactness, state handoff."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,4 @@
 """MoE dispatch invariants."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -48,7 +48,7 @@ def test_chain_matches_manual_product():
 
     # manual recomputation
     embeds = [
-        params[f"embed_{m}"][fidx[:, l]] for l, m in enumerate(spec.folded_shape)
+        params[f"embed_{m}"][fidx[:, j]] for j, m in enumerate(spec.folded_shape)
     ]
     x = jnp.stack(embeds, axis=1)
     from repro.kernels import ref

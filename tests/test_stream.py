@@ -152,7 +152,7 @@ def test_chunked_writer_rejects_use_after_close(tmp_path):
 def test_load_stream_corrupt_chunk_is_clean_error_not_garbage(tmp_path):
     """Lazy loading defers chunk reads — a flipped byte must surface as a
     checksum ValueError at first decode, never as silently wrong values."""
-    import container_corruption
+    import test_container_corruption as container_corruption
 
     enc = _tt_payload()
     path = str(tmp_path / "p.tcdc")
@@ -170,7 +170,7 @@ def test_load_stream_corrupt_chunk_is_clean_error_not_garbage(tmp_path):
     ("index_past_eof", "outside data region"),
 ])
 def test_load_stream_rejects_broken_chunk_index(tmp_path, mode, match):
-    import container_corruption
+    import test_container_corruption as container_corruption
 
     enc = _tt_payload()
     path = str(tmp_path / "p.tcdc")

@@ -1,7 +1,5 @@
 """End-to-end system tests: training loop, serving engine, and the
 TensorCodec <-> framework integrations."""
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
