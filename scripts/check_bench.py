@@ -9,13 +9,19 @@ fails CI when a headline metric regresses more than ``--tolerance``
 - ``stream.entries_per_sec``  (higher is better; BENCH_stream.json)
 - ``fleet.entries_per_sec``   (higher is better; BENCH_fleet.json)
 - ``fleet.p99_ms``            (lower is better;  BENCH_fleet.json)
+- ``fleet.fused_cold_prefetch_eps`` (higher is better; the fused-decode
+                              cold-pass cell with prefetch on)
 - ``fleet_procs.entries_per_sec`` / ``fleet_procs.p99_ms``
                               (BENCH_fleet_procs.json, the multi-process cell)
+- ``kernels.decode_tile_entries_per_sec`` / ``kernels.decode_tile_fused_speedup``
+                              (BENCH_kernels.json, the fused decode roofline)
 
 Metrics whose BENCH file is absent are skipped unless named in
-``--require`` (CI's tier1 job requires stream+fleet, the multi-process
-smoke job requires fleet_procs — each job gates only what it produced).
-``--update`` reseeds the baseline from the current BENCH files.
+``--require`` (CI's tier1 job requires stream+fleet+kernels, the
+multi-process smoke job requires fleet_procs — each job gates only what
+it produced); a metric whose rows are missing from an older BENCH file
+is skipped too.  ``--update`` reseeds the baseline from the current
+BENCH files.
 
     python scripts/check_bench.py --require stream --require fleet
     python scripts/check_bench.py --update
@@ -31,7 +37,21 @@ RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                        "..", "benchmarks", "results")
 BASELINE = os.path.join(RESULTS, "baseline.json")
 
+def _warm(runs):
+    """The untagged default-pass rows (fused/cold cells carry a "pass")."""
+    return [r for r in runs if r.get("pass") is None]
+
+
+def _fused_cold_prefetch(runs):
+    return [
+        r for r in runs
+        if r.get("pass") == "cold" and r.get("prefetch") is True
+    ]
+
+
 #: group -> (bench file, {metric: (extractor over runs, higher_is_better)})
+#: an extractor raising ValueError/KeyError means "rows absent in this
+#: BENCH file" (older format) — the metric is skipped, not failed
 GROUPS = {
     "stream": (
         "BENCH_stream.json",
@@ -40,20 +60,45 @@ GROUPS = {
     "fleet": (
         "BENCH_fleet.json",
         {
-            "entries_per_sec": (lambda runs: max(r["entries_per_sec"] for r in runs), True),
+            "entries_per_sec": (
+                lambda runs: max(r["entries_per_sec"] for r in _warm(runs)), True
+            ),
             "p99_ms": (
-                lambda runs: min(r["p99_ms"] for r in runs if r["p99_ms"] is not None),
+                lambda runs: min(
+                    r["p99_ms"] for r in _warm(runs) if r["p99_ms"] is not None
+                ),
                 False,
+            ),
+            "fused_cold_prefetch_eps": (
+                lambda runs: max(
+                    r["entries_per_sec"] for r in _fused_cold_prefetch(runs)
+                ),
+                True,
             ),
         },
     ),
     "fleet_procs": (
         "BENCH_fleet_procs.json",
         {
-            "entries_per_sec": (lambda runs: max(r["entries_per_sec"] for r in runs), True),
+            "entries_per_sec": (
+                lambda runs: max(r["entries_per_sec"] for r in _warm(runs)), True
+            ),
             "p99_ms": (
-                lambda runs: min(r["p99_ms"] for r in runs if r["p99_ms"] is not None),
+                lambda runs: min(
+                    r["p99_ms"] for r in _warm(runs) if r["p99_ms"] is not None
+                ),
                 False,
+            ),
+        },
+    ),
+    "kernels": (
+        "BENCH_kernels.json",
+        {
+            "decode_tile_entries_per_sec": (
+                lambda runs: max(r["fused_entries_per_sec"] for r in runs), True
+            ),
+            "decode_tile_fused_speedup": (
+                lambda runs: max(r["fused_speedup"] for r in runs), True
             ),
         },
     ),
@@ -68,10 +113,13 @@ def current_metrics() -> dict[str, dict[str, float]]:
             continue
         with open(path) as f:
             runs = json.load(f)["runs"]
-        out[group] = {
-            name: round(float(extract(runs)), 4)
-            for name, (extract, _) in metrics.items()
-        }
+        vals: dict[str, float] = {}
+        for name, (extract, _) in metrics.items():
+            try:
+                vals[name] = round(float(extract(runs)), 4)
+            except (ValueError, KeyError):  # rows absent (older BENCH file)
+                continue
+        out[group] = vals
     return out
 
 

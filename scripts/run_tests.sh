@@ -9,6 +9,7 @@
 #     scripts/run_tests.sh stream-smoke     # streaming fit -> BENCH_stream.json
 #     scripts/run_tests.sh fleet-smoke      # 3-instance in-process fleet
 #     scripts/run_tests.sh fleet-procs-smoke  # 3 OS-process workers (sockets)
+#     scripts/run_tests.sh kernels          # kernel tests + fused-decode roofline
 #     scripts/run_tests.sh bench-gate       # BENCH_*.json vs committed baseline
 #     scripts/run_tests.sh -m 'not slow'    # pytest passthrough (custom select)
 #
@@ -79,6 +80,18 @@ phase_fleet_procs_smoke() {
     echo "fleet procs smoke OK: $(tr -d '\n' < benchmarks/results/BENCH_fleet_procs.json | head -c 200)"
 }
 
+phase_kernels() {
+    # Kernel backends: the pytest sweeps (decode-tile interpret-vs-oracle
+    # bit-parity, attention/LSTM backends) plus the fused-decode roofline
+    # smoke, which writes BENCH_kernels.json for the bench gate — the
+    # fused path must hold its entries/sec and its speedup over the
+    # eager multi-launch serving path from PR to PR.
+    python -m pytest -x -q tests/test_kernels.py
+    python -m benchmarks.kernels_bench --smoke
+    test -s benchmarks/results/BENCH_kernels.json
+    echo "kernels OK: $(tr -d '\n' < benchmarks/results/BENCH_kernels.json | head -c 200)"
+}
+
 phase_bench_gate() {
     # Fail on >30% regression of the headline BENCH metrics vs the
     # committed baseline (scripts/check_bench.py --update reseeds it).
@@ -92,6 +105,7 @@ case "${1:-all}" in
     stream-smoke)      phase_stream_smoke ;;
     fleet-smoke)       phase_fleet_smoke ;;
     fleet-procs-smoke) phase_fleet_procs_smoke ;;
+    kernels)           phase_kernels ;;
     bench-gate)        phase_bench_gate ;;
     all)
         phase_registry
@@ -100,6 +114,7 @@ case "${1:-all}" in
         phase_stream_smoke
         phase_fleet_smoke
         phase_fleet_procs_smoke
+        phase_kernels
         phase_bench_gate
         ;;
     *)

@@ -73,6 +73,41 @@ def count_params(params: Params) -> int:
     return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
 
 
+def fused_decode_inputs(
+    params: Params, spec: FoldingSpec, cfg: NTTDConfig
+) -> tuple[jax.Array, ...]:
+    """Stack params into the flat operand layout of the fused decode kernel.
+
+    Embedding tables (shared per folded-mode length) are stacked per step
+    and zero-padded to ``M = max(folded_shape)`` rows, giving one dense
+    [T, M, H] operand that the kernel broadcasts once per core.  Returns
+    ``(emb, wi, wh, b, w_first, b_first, w_mid, b_mid, w_last, b_last)``.
+    """
+    m_max = max(spec.folded_shape)
+    steps = []
+    for m in spec.folded_shape:
+        tab = params[f"embed_{m}"]
+        if m < m_max:
+            tab = jnp.concatenate(
+                [tab, jnp.zeros((m_max - m, tab.shape[1]), tab.dtype)], axis=0
+            )
+        steps.append(tab)
+    emb = jnp.stack(steps, axis=0)  # [T, M, H]
+    lstm = params["lstm"]
+    return (
+        emb,
+        lstm["wi"],
+        lstm["wh"],
+        lstm["b"],
+        params["head_first"]["w"],
+        params["head_first"]["b"],
+        params["head_mid"]["w"],
+        params["head_mid"]["b"],
+        params["head_last"]["w"],
+        params["head_last"]["b"],
+    )
+
+
 def apply(
     params: Params,
     folded_idx: jax.Array,  # [B, d'] int32
@@ -82,6 +117,14 @@ def apply(
     """Approximate entries at the given folded indices.  Returns [B]."""
     d_prime = spec.d_prime
     r = cfg.rank
+    if cfg.kernel_impl == "fused" and d_prime >= 2:
+        # single-program decode: whole chain in one kernel / one XLA program
+        # (Pallas on TPU, jitted oracle on CPU — see kernels.ops)
+        return ops.nttd_decode_tile(
+            folded_idx.astype(jnp.int32),
+            *fused_decode_inputs(params, spec, cfg),
+            impl="fused",
+        )
     # --- embedding lookup (shared tables by mode length) -------------------
     embeds = [
         params[f"embed_{m}"][folded_idx[:, j]] for j, m in enumerate(spec.folded_shape)

@@ -20,6 +20,7 @@ for new code.
 from __future__ import annotations
 
 import io
+import os
 import struct
 
 import jax.numpy as jnp
@@ -110,7 +111,17 @@ def save_bytes(ct: codec_mod.CompressedTensor, dtype=np.float32) -> bytes:
     return out.getvalue()
 
 
-def load_bytes(data: bytes) -> codec_mod.CompressedTensor:
+def load_bytes(
+    data: bytes, kernel_impl: str | None = None
+) -> codec_mod.CompressedTensor:
+    """Rebuild a CompressedTensor from its v2 body.
+
+    ``kernel_impl`` picks the decode backend of the rebuilt payload (the
+    wire format carries no impl — it is an execution choice, not data).
+    Default is "ref" for historical bit-stability; ``REPRO_DECODE_IMPL``
+    overrides it process-wide, which is how serving benches opt whole
+    worker fleets into the fused decode path without touching payloads.
+    """
     from repro.core.folding import make_folding_spec
 
     buf = io.BytesIO(data)
@@ -127,7 +138,11 @@ def load_bytes(data: bytes) -> codec_mod.CompressedTensor:
     if not np.array_equal(spec.factors, factors.astype(np.int64)):
         # factor chooser changed between versions: rebuild spec from factors
         spec = _spec_from_factors(shape, factors.astype(np.int64))
-    cfg = nttd.NTTDConfig(rank=rank, hidden=hidden)
+    cfg = nttd.NTTDConfig(
+        rank=rank,
+        hidden=hidden,
+        kernel_impl=kernel_impl or os.environ.get("REPRO_DECODE_IMPL", "ref"),
+    )
     dtype = _DTYPES[code]
     # rebuild an abstract params tree to know the shapes, then fill
     import jax

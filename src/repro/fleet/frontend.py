@@ -73,6 +73,7 @@ class FleetFrontend:
         max_inflight_bytes: int | None = None,
         latency_window: int = 2048,
         transport_factory: Callable[[str], Transport] | None = None,
+        prefetch: bool = False,
     ):
         if isinstance(instances, int):
             if instances < 1:
@@ -84,7 +85,8 @@ class FleetFrontend:
         self._latency_window = latency_window
         self._transport_factory = transport_factory or (
             lambda iid: LocalTransport(
-                iid, cache_bytes=cache_bytes, max_batch=max_batch
+                iid, cache_bytes=cache_bytes, max_batch=max_batch,
+                prefetch=prefetch,
             )
         )
         if isinstance(instances, dict):

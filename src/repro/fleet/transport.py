@@ -292,10 +292,11 @@ class LocalTransport:
         *,
         cache_bytes: int | None = None,
         max_batch: int = 65536,
+        prefetch: bool = False,
     ):
         self.instance_id = instance_id
         self.service = service or CodecService(
-            max_batch=max_batch, cache_bytes=cache_bytes
+            max_batch=max_batch, cache_bytes=cache_bytes, prefetch=prefetch
         )
         self._next_rid = 0
         self._pending: dict[int, int] = {}  # rid -> service ticket
@@ -491,6 +492,7 @@ class SocketTransport:
         connect_timeout: float = 120.0,
         address: str | None = None,
         python: str | None = None,
+        prefetch: bool = False,
     ) -> "SocketTransport":
         """Launch ``python -m repro.fleet.worker`` as a child process and
         connect to it.  Default address is a Unix socket in a fresh temp
@@ -518,6 +520,8 @@ class SocketTransport:
         ]
         if cache_bytes is not None:
             cmd += ["--cache-bytes", str(cache_bytes)]
+        if prefetch:
+            cmd += ["--prefetch"]
         proc = subprocess.Popen(cmd, env=env)
         try:
             t = cls(

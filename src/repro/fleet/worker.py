@@ -193,6 +193,11 @@ def main(argv: list[str] | None = None) -> int:
     )
     parser.add_argument("--cache-bytes", type=int, default=None)
     parser.add_argument("--max-batch", type=int, default=65536)
+    parser.add_argument(
+        "--prefetch",
+        action="store_true",
+        help="overlap chunk reads / tile-input builds with decode compute",
+    )
     args = parser.parse_args(argv)
 
     family, addr = parse_address(args.listen)
@@ -205,7 +210,11 @@ def main(argv: list[str] | None = None) -> int:
     shown = f"tcp:{bound[0]}:{bound[1]}" if family == socket.AF_INET else f"unix:{bound}"
     print(f"READY {shown}", flush=True)
 
-    service = CodecService(max_batch=args.max_batch, cache_bytes=args.cache_bytes)
+    service = CodecService(
+        max_batch=args.max_batch,
+        cache_bytes=args.cache_bytes,
+        prefetch=args.prefetch,
+    )
     try:
         conn, _ = sock.accept()
         with conn:

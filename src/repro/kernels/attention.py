@@ -28,6 +28,7 @@ NEG_INF = -1e30
 def _kernel(
     q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     causal: bool, q_offset: int, scale: float, tile_q: int, tile_kv: int,
+    kv_valid: int | None,
 ):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
@@ -44,10 +45,19 @@ def _kernel(
     v = v_ref[0, :, 0, :].astype(jnp.float32)           # [TKV, D]
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [TQ, TKV]
 
-    if causal:
-        qpos = qi * tile_q + jax.lax.broadcasted_iota(jnp.int32, (tile_q, tile_kv), 0)
+    if causal or kv_valid is not None:
         kpos = ki * tile_kv + jax.lax.broadcasted_iota(jnp.int32, (tile_q, tile_kv), 1)
-        s = jnp.where(qpos + q_offset >= kpos, s, NEG_INF)
+        keep = None
+        if causal:
+            qpos = qi * tile_q + jax.lax.broadcasted_iota(
+                jnp.int32, (tile_q, tile_kv), 0
+            )
+            keep = qpos + q_offset >= kpos
+        if kv_valid is not None:
+            # kv padded to the tile boundary: mask the padded columns
+            pad_keep = kpos < kv_valid
+            keep = pad_keep if keep is None else jnp.logical_and(keep, pad_keep)
+        s = jnp.where(keep, s, NEG_INF)
 
     m_prev = m_scr[...]
     l_prev = l_scr[...]
@@ -71,7 +81,9 @@ def _kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "q_offset", "tile_q", "tile_kv", "interpret"),
+    static_argnames=(
+        "causal", "q_offset", "tile_q", "tile_kv", "interpret", "kv_valid"
+    ),
 )
 def flash_attention(
     q: jax.Array,
@@ -83,8 +95,13 @@ def flash_attention(
     tile_q: int = DEFAULT_TILE_Q,
     tile_kv: int = DEFAULT_TILE_KV,
     interpret: bool = False,
+    kv_valid: int | None = None,
 ) -> jax.Array:
-    """q: [B, Sq, Hq, D]; k, v: [B, Skv, Hkv, D] -> [B, Sq, Hq, D]."""
+    """q: [B, Sq, Hq, D]; k, v: [B, Skv, Hkv, D] -> [B, Sq, Hq, D].
+
+    ``kv_valid``: static count of real kv positions when k/v were padded up
+    to ``tile_kv`` — columns >= kv_valid are masked out of the softmax.
+    """
     bsz, sq, hq, dim = q.shape
     _, skv, hkv, _ = k.shape
     if sq % tile_q or skv % tile_kv:
@@ -102,6 +119,7 @@ def flash_attention(
             scale=scale,
             tile_q=tile_q,
             tile_kv=tile_kv,
+            kv_valid=kv_valid,
         ),
         grid=grid,
         in_specs=[

@@ -5,10 +5,19 @@
   * "pallas"            — compiled Pallas kernel.  Default on TPU.
   * "pallas_interpret"  — Pallas kernel body interpreted in Python
                           (correctness validation on CPU).
-  * "auto"              — "pallas" on TPU else "ref".
+  * "fused"             — one-program decode (``nttd_decode_tile`` only):
+                          the Pallas kernel on TPU, the jitted oracle on
+                          CPU.  Either way the whole decode chain runs as
+                          a single compiled program instead of a chain of
+                          separately dispatched ops.
+  * "auto"              — "pallas" on TPU else "ref" ("fused" for
+                          ``nttd_decode_tile``, where the jitted oracle is
+                          the fast CPU path).
 
 Wrappers also handle batch padding so callers never worry about tile
-divisibility.
+divisibility.  Silent fallback to the oracle on shapes a kernel cannot
+take is reserved for ``impl="auto"``; an explicitly requested backend is
+honored by padding+masking instead.
 """
 from __future__ import annotations
 
@@ -16,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import attention as _attention
+from repro.kernels import decode_tile as _dt
 from repro.kernels import lstm as _lstm
 from repro.kernels import ref as _ref
 from repro.kernels import tt_contract as _tt
@@ -97,15 +107,82 @@ def attention(
     kv_len: jax.Array | None = None,
     impl: str = "auto",
 ) -> jax.Array:
+    requested = impl
     impl = _resolve(impl)
-    if impl in ("ref", "chunked") or kv_len is not None or q.shape[1] % 128 or k.shape[1] % 128:
-        # variable-length and non-tile-aligned cases use the oracle path
+    misaligned = q.shape[1] % _attention.DEFAULT_TILE_Q or (
+        k.shape[1] % _attention.DEFAULT_TILE_KV
+    )
+    if (
+        impl in ("ref", "chunked")
+        or kv_len is not None
+        or (requested == "auto" and misaligned)
+    ):
+        # variable-length cases use the oracle path; silent fallback on
+        # non-tile-aligned shapes is reserved for impl="auto" — an explicit
+        # "pallas"/"pallas_interpret" request is honored via pad+mask below
         if kv_len is None and (
             impl == "chunked" or q.shape[1] >= CHUNKED_THRESHOLD
         ):
             return _ref.mha_attention_chunked(q, k, v, causal=causal, q_offset=q_offset)
         return _ref.mha_attention(q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len)
-    return _attention.flash_attention(
+    sq, skv = q.shape[1], k.shape[1]
+    pad_q = (-sq) % _attention.DEFAULT_TILE_Q
+    pad_kv = (-skv) % _attention.DEFAULT_TILE_KV
+    kv_valid = None
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        kv_valid = skv  # static: mask the padded kv columns in-kernel
+    out = _attention.flash_attention(
         q, k, v, causal=causal, q_offset=q_offset,
         interpret=impl == "pallas_interpret",
+        kv_valid=kv_valid,
     )
+    return out[:, :sq] if pad_q else out
+
+
+# Fused NTTD decode: jitted oracle = the single-program CPU path (the whole
+# chain compiles to one XLA executable instead of per-op dispatches).
+_fused_oracle = jax.jit(_ref.nttd_decode_tile)
+
+
+def nttd_decode_tile(
+    idx: jax.Array,
+    emb: jax.Array,
+    wi: jax.Array,
+    wh: jax.Array,
+    b: jax.Array,
+    w_first: jax.Array,
+    b_first: jax.Array,
+    w_mid: jax.Array,
+    b_mid: jax.Array,
+    w_last: jax.Array,
+    b_last: jax.Array,
+    *,
+    impl: str = "auto",
+    tile_b: int | None = None,
+) -> jax.Array:
+    """Fused NTTD decode of a [B, T] tile of folded indices -> [B] values.
+
+    See ``decode_tile.decode_tile`` for operand layout.  Batch padding to
+    the Pallas tile is handled here; B == 0 short-circuits (a zero-size
+    grid is invalid in Pallas).
+    """
+    if idx.shape[0] == 0:
+        return jnp.zeros((0,), emb.dtype)
+    if impl in ("auto", "fused"):
+        impl = "pallas" if jax.default_backend() == "tpu" else "fused"
+    heads = (w_first, b_first, w_mid, b_mid, w_last, b_last)
+    if impl == "ref":
+        return _ref.nttd_decode_tile(idx, emb, wi, wh, b, *heads)
+    if impl == "fused":
+        return _fused_oracle(idx, emb, wi, wh, b, *heads)
+    tile = tile_b or min(_dt.DEFAULT_TILE_B, max(8, idx.shape[0]))
+    idx_p, bsz = _pad_batch(idx, tile)
+    out = _dt.decode_tile(
+        idx_p, emb, wi, wh, b, *heads,
+        tile_b=tile, interpret=impl == "pallas_interpret",
+    )
+    return out[:bsz]

@@ -54,44 +54,119 @@ def lstm_scan(
     wi: [H, 4H]    input->gates
     wh: [H, 4H]    hidden->gates
     b:  [4H]       gate bias
-    returns hidden states [B, T, H]
+    returns hidden states [B, T, H] in ``x.dtype``
 
-    Gate layout along the 4H axis: (i, f, g, o).
+    Gate layout along the 4H axis: (i, f, g, o).  Carries and gate math
+    run in f32 regardless of ``x.dtype`` — the Pallas kernel computes in
+    f32 and casts back, so the oracle must too or bf16 parity tests
+    compare unlike against unlike.
     """
     bsz, _, hid = x.shape
+    xf = x.astype(jnp.float32)
+    wif = wi.astype(jnp.float32)
+    whf = wh.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
 
     def step(carry, xt):
         h, c = carry
-        gates = xt @ wi + h @ wh + b
+        gates = xt @ wif + h @ whf + bf
         i, f, g, o = jnp.split(gates, 4, axis=-1)
         c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
         h = jax.nn.sigmoid(o) * jnp.tanh(c)
         return (h, c), h
 
     init = (
-        jnp.zeros((bsz, hid), dtype=x.dtype),
-        jnp.zeros((bsz, hid), dtype=x.dtype),
+        jnp.zeros((bsz, hid), dtype=jnp.float32),
+        jnp.zeros((bsz, hid), dtype=jnp.float32),
     )
-    _, hs = jax.lax.scan(step, init, jnp.moveaxis(x, 1, 0))
-    return jnp.moveaxis(hs, 0, 1)
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(xf, 1, 0))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype)
 
 
 def lstm_unrolled(
     x: jax.Array, wi: jax.Array, wh: jax.Array, b: jax.Array
 ) -> jax.Array:
     """Same semantics as lstm_scan with the time loop unrolled in Python
-    (T is tiny for NTTD); XLA fuses across steps."""
+    (T is tiny for NTTD); XLA fuses across steps.  f32 internally, like
+    lstm_scan and the Pallas kernel."""
     bsz, t_steps, hid = x.shape
-    h = jnp.zeros((bsz, hid), dtype=x.dtype)
-    c = jnp.zeros((bsz, hid), dtype=x.dtype)
+    xf = x.astype(jnp.float32)
+    wif = wi.astype(jnp.float32)
+    whf = wh.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    h = jnp.zeros((bsz, hid), dtype=jnp.float32)
+    c = jnp.zeros((bsz, hid), dtype=jnp.float32)
     outs = []
     for t in range(t_steps):
-        gates = x[:, t] @ wi + h @ wh + b
+        gates = xf[:, t] @ wif + h @ whf + bf
         i, f, g, o = jnp.split(gates, 4, axis=-1)
         c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
         h = jax.nn.sigmoid(o) * jnp.tanh(c)
         outs.append(h)
-    return jnp.stack(outs, axis=1)
+    return jnp.stack(outs, axis=1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Fused NTTD decode tile (paper Alg. 2, the whole per-entry chain)
+# ----------------------------------------------------------------------------
+def nttd_decode_tile(
+    idx: jax.Array,
+    emb: jax.Array,
+    wi: jax.Array,
+    wh: jax.Array,
+    b: jax.Array,
+    w_first: jax.Array,
+    b_first: jax.Array,
+    w_mid: jax.Array,
+    b_mid: jax.Array,
+    w_last: jax.Array,
+    b_last: jax.Array,
+) -> jax.Array:
+    """Oracle for ``decode_tile.decode_tile``: embedding gather -> T-step
+    LSTM -> first/mid/last head projections -> R-wide chain contraction,
+    all in one expression.
+
+    idx: [B, T] int32 folded indices; emb: [T, M, H] stacked per-step
+    embedding tables (padded to M rows); heads as in decode_tile.
+    Returns [B] in ``emb.dtype``.
+
+    All math is f32 internally (matching the kernel), with the chain
+    contracted step-interleaved in the exact order the kernel uses so
+    interpret-mode parity is bitwise, not merely close.
+    """
+    bsz, t_steps = idx.shape
+    if t_steps < 2:
+        raise ValueError(f"nttd_decode_tile needs T >= 2 steps, got {t_steps}")
+    rank = b_first.shape[0]
+    hid = emb.shape[-1]
+    embf = emb.astype(jnp.float32)
+    wif = wi.astype(jnp.float32)
+    whf = wh.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    h = jnp.zeros((bsz, hid), jnp.float32)
+    c = jnp.zeros((bsz, hid), jnp.float32)
+    v = None
+    out = None
+    for t in range(t_steps):
+        xt = jnp.take(embf[t], idx[:, t], axis=0)  # [B, H]
+        gates = xt @ wif + h @ whf + bf
+        i = jax.nn.sigmoid(gates[:, :hid])
+        f = jax.nn.sigmoid(gates[:, hid : 2 * hid])
+        g = jnp.tanh(gates[:, 2 * hid : 3 * hid])
+        o = jax.nn.sigmoid(gates[:, 3 * hid :])
+        c = f * c + i * g
+        h = o * jnp.tanh(c)
+        if t == 0:
+            v = h @ w_first.astype(jnp.float32) + b_first.astype(jnp.float32)
+        elif t == t_steps - 1:
+            last = h @ w_last.astype(jnp.float32) + b_last.astype(jnp.float32)
+            out = jnp.sum(v * last, axis=-1)
+        else:
+            mid = (
+                h @ w_mid.astype(jnp.float32) + b_mid.astype(jnp.float32)
+            ).reshape(bsz, rank, rank)
+            v = jnp.sum(v[:, :, None] * mid, axis=1)
+    return out.astype(emb.dtype)
 
 
 # ----------------------------------------------------------------------------
@@ -150,11 +225,16 @@ def mha_attention_chunked(
     The [B, H, chunk, Skv] score block is the peak transient instead of the
     full [B, H, Sq, Skv] — this is the XLA-path equivalent of the flash
     kernel's working-set bound and the configuration the dry-run lowers for
-    long sequences.
+    long sequences.  Ragged sequences (sq % chunk != 0) scan the aligned
+    prefix and attend the tail chunk separately, so the memory bound holds
+    for every length, not just multiples of ``chunk``.
     """
     bq, sq, hq, dim = q.shape
-    if sq % chunk or sq <= chunk:
+    if sq <= chunk:
         return mha_attention(q, k, v, causal=causal, q_offset=q_offset)
+
+    nq, tail = divmod(sq, chunk)
+    aligned = nq * chunk
 
     def body(carry, qc_and_off):
         qc, off = qc_and_off
@@ -162,8 +242,15 @@ def mha_attention_chunked(
         return carry, out
 
     body = jax.checkpoint(body)
-    nq = sq // chunk
-    qs = jnp.moveaxis(q.reshape(bq, nq, chunk, hq, dim), 1, 0)  # [nq,B,chunk,H,D]
+    qs = jnp.moveaxis(
+        q[:, :aligned].reshape(bq, nq, chunk, hq, dim), 1, 0
+    )  # [nq,B,chunk,H,D]
     offs = q_offset + jnp.arange(nq) * chunk
     _, outs = jax.lax.scan(body, (), (qs, offs))
-    return jnp.moveaxis(outs, 0, 1).reshape(bq, sq, hq, dim)
+    out = jnp.moveaxis(outs, 0, 1).reshape(bq, aligned, hq, dim)
+    if tail:
+        tail_out = mha_attention(
+            q[:, aligned:], k, v, causal=causal, q_offset=q_offset + aligned
+        )
+        out = jnp.concatenate([out, tail_out], axis=1)
+    return out

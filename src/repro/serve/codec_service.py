@@ -43,6 +43,7 @@ tickets land in ``failed`` — every other queued request completes.
 from __future__ import annotations
 
 import collections
+import concurrent.futures
 import dataclasses
 from typing import Callable
 
@@ -174,13 +175,34 @@ class _StreamPayload:
     body_nbytes: int
     enc: codecs.Encoded | None = None
     ownership: Ownership | None = None
+    #: in-flight background warm (prefetch): joined by _get before use
+    warm: concurrent.futures.Future | None = None
+    #: True after a background warm materialized the body: the NEXT counted
+    #: access is the one the warm's miss already paid for, so it must not
+    #: also count a hit (keeps counters identical to the synchronous path,
+    #: where materialization absorbs the first access)
+    warm_credit: bool = False
 
 
 class CodecService:
-    def __init__(self, max_batch: int = 65536, cache_bytes: int | None = None):
+    def __init__(
+        self,
+        max_batch: int = 65536,
+        cache_bytes: int | None = None,
+        prefetch: bool = False,
+    ):
         self.max_batch = max_batch
         #: byte budget for droppable decode state; None = unbounded (legacy)
         self.cache_bytes = cache_bytes
+        #: overlap I/O with compute on a single background thread:
+        #: load_stream pre-warms payload bodies (mmap page-in + CRC +
+        #: parse) ahead of the query stream, chunk reads run ahead of the
+        #: joining copy, and tile k+1's index block is built while tile k
+        #: decodes.  Answers and cache counters are bit-identical with
+        #: prefetching off — the pipeline only reorders WHEN input-side
+        #: work happens, never what is decoded or how it is counted.
+        self.prefetch = prefetch
+        self._prefetch_pool: concurrent.futures.ThreadPoolExecutor | None = None
         self._payloads: dict[str, codecs.Encoded] = {}
         self._streams: dict[str, _StreamPayload] = {}
         self._info: dict[str, PayloadInfo] = {}
@@ -226,10 +248,19 @@ class CodecService:
         self._enc_counters_seen.pop(name, None)
         self._payloads.pop(name, None)
         body_nbytes = sum(c.length for c in chunks)
-        self._streams[name] = _StreamPayload(
+        sp = _StreamPayload(
             path, codec_name, chunks, view, tile_entries, body_nbytes
         )
+        self._streams[name] = sp
         self._info[name] = PayloadInfo(codec_name, body_nbytes)
+        pool = self._pool()
+        if pool is not None:
+            # warm the payload ahead of the query stream: chunk page-in,
+            # CRC, and body parse run on the background thread while the
+            # caller keeps loading/serving other payloads.  _get joins the
+            # future before first use, so answers and the materialization
+            # miss count are identical with prefetching off.
+            sp.warm = pool.submit(self._warm_stream, name, sp)
         return self._info[name]
 
     def unload(self, name: str) -> None:
@@ -269,21 +300,78 @@ class CodecService:
             raise KeyError(
                 f"no payload {name!r}; loaded: {', '.join(self.payloads())}"
             )
+        if sp.enc is None and sp.warm is not None:
+            warm, sp.warm = sp.warm, None
+            warm.result()  # propagate a failed background warm verbatim
         if sp.enc is None:
             if sp.ownership is not None and not sp.ownership.owns_payload():
                 raise NotOwnedError(
                     f"payload {name!r} is not owned by this instance "
                     "(ownership filter excludes every chunk)"
                 )
-            self.cache_stats.miss(name)
-            self._info[name].cache_misses += 1
-            body = b"".join(container.read_chunk(sp.view, c) for c in sp.chunks)
-            sp.enc = codecs.get_codec(sp.codec).encoded_cls.from_bytes(body)
-            self._info[name].payload_bytes = sp.enc.payload_bytes()
+            self._materialize(name, sp)
         elif count:
-            self.cache_stats.hit(name)
-            self._info[name].cache_hits += 1
+            if sp.warm_credit:
+                sp.warm_credit = False  # background warm's miss covered this
+            else:
+                self.cache_stats.hit(name)
+                self._info[name].cache_hits += 1
         return sp.enc
+
+    def _materialize(
+        self, name: str, sp: _StreamPayload, pipelined: bool = True
+    ) -> None:
+        """Read + parse a lazy payload body (counted as one miss, exactly
+        like the pre-warm era).  ``pipelined=False`` reads chunks inline —
+        required when already ON the single prefetch thread (the warm
+        path), where submitting to the pool and waiting would deadlock."""
+        self.cache_stats.miss(name)
+        self._info[name].cache_misses += 1
+        reads = (
+            self._read_chunks(sp)
+            if pipelined
+            else [container.read_chunk(sp.view, c) for c in sp.chunks]
+        )
+        body = b"".join(reads)
+        sp.enc = codecs.get_codec(sp.codec).encoded_cls.from_bytes(body)
+        self._info[name].payload_bytes = sp.enc.payload_bytes()
+
+    def _warm_stream(self, name: str, sp: _StreamPayload) -> None:
+        """Background payload warm, scheduled by load_stream when prefetch
+        is on.  Re-checks registration and ownership at RUN time (the fleet
+        router may have installed a filter, or the name been reloaded,
+        since scheduling) and silently skips when materializing would be
+        wrong — the query path then does it synchronously as usual."""
+        if self._streams.get(name) is not sp or sp.enc is not None:
+            return
+        if sp.ownership is not None and not sp.ownership.owns_payload():
+            return
+        self._materialize(name, sp, pipelined=False)
+        sp.warm_credit = True
+
+    # -------------------------------------------------------------- prefetch
+    def _pool(self) -> concurrent.futures.ThreadPoolExecutor | None:
+        """Lazy single-worker pool: one background thread keeps the
+        input-side pipeline strictly ordered (chunk i+1 never races ahead
+        of chunk i+2), and nothing is spawned unless prefetch is on AND a
+        pipelined path actually runs."""
+        if not self.prefetch:
+            return None
+        if self._prefetch_pool is None:
+            self._prefetch_pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="codec-prefetch"
+            )
+        return self._prefetch_pool
+
+    def _read_chunks(self, sp: _StreamPayload) -> list[bytes]:
+        """Chunk bytes in index order.  With prefetch, reads run ahead on
+        the background thread (page-in + CRC drop the GIL) while the main
+        thread copies earlier chunks into the joined body."""
+        pool = self._pool()
+        if pool is None or len(sp.chunks) < 2:
+            return [container.read_chunk(sp.view, c) for c in sp.chunks]
+        futs = [pool.submit(container.read_chunk, sp.view, c) for c in sp.chunks]
+        return [f.result() for f in futs]
 
     # ------------------------------------------------------------- ownership
     def set_ownership(self, name: str, ownership: Ownership | None) -> None:
@@ -420,34 +508,58 @@ class CodecService:
         tids = flat // t
         if not len(flat):  # delegate so the dtype matches the untiled path
             return self._decode_batched(enc, idx), 0
-        out = None
-        decoded = 0
         info = self._info[name]
+
+        # pass 1: classify — cached tiles resolve immediately, misses queue
+        # for the (possibly pipelined) decode pass.  Same structure with
+        # prefetch on or off, so stats and answers match bit-for-bit.
+        tiles: dict[int, np.ndarray] = {}
+        misses: list[int] = []
         for tid in np.unique(tids):
-            key = ("tile", name, int(tid))
-            entry = self._cache_touch(key)
+            entry = self._cache_touch(("tile", name, int(tid)))
             if entry is None:
                 self.cache_stats.miss(name)
                 info.cache_misses += 1
-                decoded += 1
-                start = int(tid) * t
-                stop = min(start + t, n_entries)
-                tpos = flat_to_multi(np.arange(start, stop, dtype=np.int64), shape)
-                tile = self._decode_batched(enc, tpos)
-                # unowned tiles decode through WITHOUT caching — correct
-                # mid-rebalance, and resident tile bytes stay this
-                # instance's shard of the fleet total
-                if sp.ownership is None or sp.ownership.owns_tile(int(tid)):
-                    self._cache_put(key, _CacheEntry(int(tile.nbytes), tile))
+                misses.append(int(tid))
             else:
                 self.cache_stats.hit(name)
                 info.cache_hits += 1
-                tile = entry.value
-            if out is None:
-                out = np.empty(len(flat), dtype=tile.dtype)
+                tiles[int(tid)] = entry.value
+
+        # pass 2: decode misses.  The per-tile input block (flat range ->
+        # multi indices) is pure CPU work independent of the decode, so
+        # with prefetch on, tile k+1's block is built on the background
+        # thread while tile k decodes.
+        def build(tid: int) -> np.ndarray:
+            start = tid * t
+            stop = min(start + t, n_entries)
+            return flat_to_multi(np.arange(start, stop, dtype=np.int64), shape)
+
+        pool = self._pool()
+        fut = None
+        if pool is not None and len(misses) > 1:
+            fut = pool.submit(build, misses[0])
+        for j, tid in enumerate(misses):
+            if fut is not None:
+                tpos = fut.result()
+                fut = pool.submit(build, misses[j + 1]) if j + 1 < len(misses) else None
+            else:
+                tpos = build(tid)
+            tile = self._decode_batched(enc, tpos)
+            tiles[tid] = tile
+            # unowned tiles decode through WITHOUT caching — correct
+            # mid-rebalance, and resident tile bytes stay this
+            # instance's shard of the fleet total
+            if sp.ownership is None or sp.ownership.owns_tile(tid):
+                self._cache_put(
+                    ("tile", name, tid), _CacheEntry(int(tile.nbytes), tile)
+                )
+
+        out = np.empty(len(flat), dtype=next(iter(tiles.values())).dtype)
+        for tid, tile in tiles.items():
             mask = tids == tid
-            out[mask] = tile[flat[mask] - int(tid) * t]
-        return out, decoded
+            out[mask] = tile[flat[mask] - tid * t]
+        return out, len(misses)
 
     # --------------------------------------------------------------- queries
     def _decode_batched(self, enc: codecs.Encoded, idx: np.ndarray) -> np.ndarray:
@@ -478,7 +590,9 @@ class CodecService:
             out, calls = self._decode_tiled(name, sp, enc, idx)
         else:
             out = self._decode_batched(enc, idx)
-            calls = -(-idx.shape[0] // self.max_batch) if idx.shape[0] else 1
+            # ceil-div: 0 for an empty query, matching the tiled path
+            # (which reports 0 tiles decoded for an empty query)
+            calls = -(-idx.shape[0] // self.max_batch)
         info = self._info[name]
         info.requests += 1
         info.entries_decoded += idx.shape[0]

@@ -404,3 +404,72 @@ def test_failed_reload_unregisters_cleanly(payload_path, tmp_path):
     assert "t" not in fleet.payloads()  # fully unregistered, not half
     fleet.load_stream("t", payload_path)  # and immediately reloadable
     assert fleet.decode_at("t", _idx(4)).shape == (4,)
+
+
+# ---------------------------------------------------------------------------
+# prefetch: background warm + pipelined tile inputs change nothing observable
+# ---------------------------------------------------------------------------
+def _drain_prefetch(svc):
+    if svc._prefetch_pool is not None:
+        svc._prefetch_pool.shutdown(wait=True)
+
+
+def test_prefetch_bit_identical_service(payload_path):
+    """prefetch=True overlaps input-side work (payload warm, chunk reads,
+    tile index blocks) with decode — answers AND cache counters must be
+    bit-identical to the synchronous path."""
+    queries = [_idx(200, seed=s) for s in (1, 2, 3)] + [_idx(200, seed=1)]
+    outs, stats, infos = {}, {}, {}
+    for pf in (False, True):
+        svc = _single(payload_path, tile_entries=128, prefetch=pf)
+        outs[pf] = [svc.decode_at("t", q) for q in queries]
+        _drain_prefetch(svc)
+        stats[pf] = svc.cache_stats.as_dict()
+        info = svc.info("t")
+        infos[pf] = (info.requests, info.entries_decoded, info.decode_calls,
+                     info.cache_hits, info.cache_misses)
+    for a, b in zip(outs[False], outs[True]):
+        assert np.array_equal(a, b), "prefetch changed decoded values"
+    assert stats[False] == stats[True]
+    assert infos[False] == infos[True]
+
+
+def test_prefetch_bit_identical_fleet(payload_path):
+    """Same guarantee one level up: a prefetching fleet answers exactly
+    like a non-prefetching one and like a single resident service."""
+    queries = [_idx(150, seed=s) for s in (4, 5)]
+    ref_svc = _single(payload_path, tile_entries=128)
+    want = [ref_svc.decode_at("t", q) for q in queries]
+    for pf in (False, True):
+        fleet = FleetFrontend(3, prefetch=pf)
+        fleet.load_stream("t", payload_path, tile_entries=128)
+        got = [fleet.decode_at("t", q) for q in queries]
+        fleet.close()
+        for g, w in zip(got, want):
+            assert np.array_equal(g, w)
+
+
+def test_prefetch_warm_materializes_in_background(payload_path):
+    """load_stream with prefetch on parses the body ahead of the first
+    query; the materialization still counts exactly one miss."""
+    svc = _single(payload_path, prefetch=True)
+    _drain_prefetch(svc)  # warm has landed before any query
+    assert svc._streams["t"].enc is not None
+    assert svc.info("t").cache_misses == 1
+    out = svc.decode_at("t", _idx(50))
+    assert out.shape == (50,)
+    assert svc.info("t").cache_misses == 1  # no double materialization
+
+
+def test_empty_query_accounting(payload_path):
+    """An empty query decodes nothing: decode_calls stays 0 on BOTH the
+    tiled and untiled paths (the untiled path used to report 1)."""
+    empty = np.empty((0, len(SHAPE)), dtype=np.int64)
+    for tile_entries in (None, 128):
+        svc = _single(payload_path, tile_entries=tile_entries)
+        out = svc.decode_at("t", empty)
+        assert out.shape == (0,)
+        info = svc.info("t")
+        assert info.requests == 1
+        assert info.entries_decoded == 0
+        assert info.decode_calls == 0

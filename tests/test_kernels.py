@@ -101,3 +101,142 @@ def test_kv_len_masking():
     # manual check for batch 0: only first 10 kv positions participate
     out0 = ref.mha_attention(q[:1], k[:1, :10], v[:1, :10], causal=False)
     np.testing.assert_allclose(np.asarray(out[0]), np.asarray(out0[0]), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# explicit-impl attention on non-aligned sequence lengths (pad + mask path)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("causal", [False, True])
+def test_attention_explicit_impl_odd_seq(causal):
+    """seq=130 is not a multiple of the 128 tile: an EXPLICIT pallas impl
+    must pad+mask and run the kernel, not silently fall back to ref."""
+    b, s, h, d = 1, 130, 2, 64
+    q = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+    want = ops.attention(q, k, v, impl="ref", causal=causal)
+    got = ops.attention(q, k, v, impl="pallas_interpret", causal=causal)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_attention_explicit_impl_odd_kv_only():
+    """Cross-attention shape: aligned queries, ragged KV (skv=130)."""
+    b, sq, skv, h, d = 1, 128, 130, 2, 64
+    q = jnp.asarray(RNG.normal(size=(b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, skv, h, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, skv, h, d)), jnp.float32)
+    want = ops.attention(q, k, v, impl="ref")
+    got = ops.attention(q, k, v, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_chunked_attention_ragged_tail(causal):
+    """sq=2049 = 4*512 + 1: the scan covers the aligned prefix and the
+    ragged tail is finished separately (no silent full-score fallback)."""
+    from repro.kernels import ref
+
+    b, s, h, d = 1, 2049, 2, 32
+    q = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+    want = ref.mha_attention(q, k, v, causal=causal)
+    got = ref.mha_attention_chunked(q, k, v, chunk=512, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused NTTD decode tile: interpret-mode Pallas vs the jnp oracle
+# ---------------------------------------------------------------------------
+def _decode_tile_args(b, t, m, hid, rank, dtype, seed=1):
+    rng = np.random.default_rng(seed)
+
+    def mk(*shape, scale=0.3):
+        return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+    idx = jnp.asarray(rng.integers(0, m, size=(b, t)), jnp.int32)
+    return idx, (
+        mk(t, m, hid),                              # emb
+        mk(hid, 4 * hid), mk(hid, 4 * hid), mk(4 * hid, scale=0.1),  # lstm
+        mk(hid, rank), mk(rank, scale=0.1),         # first head
+        mk(hid, rank * rank, scale=0.5 / np.sqrt(rank)), mk(rank * rank, scale=0.1),
+        mk(hid, rank), mk(rank, scale=0.1),         # last head
+    )
+
+
+@pytest.mark.parametrize(
+    "rank,t,dtype",
+    [
+        (r, t, dt)
+        for r in [4, 8, 32]
+        for t in [2, 3, 8]
+        for dt in [jnp.float32, jnp.bfloat16]
+    ],
+)
+def test_decode_tile_parity_sweep(rank, t, dtype):
+    """Interpret-mode Pallas is BIT-IDENTICAL to the jitted oracle (same
+    compiled op order), and within eager-vs-jit ulp noise of the eager
+    oracle."""
+    from repro.kernels import ref
+
+    idx, ws = _decode_tile_args(32, t, 10, 16, rank, dtype)
+    got = ops.nttd_decode_tile(idx, *ws, impl="pallas_interpret", tile_b=16)
+    fused = ops.nttd_decode_tile(idx, *ws, impl="fused")
+    assert got.dtype == ws[0].dtype
+    assert np.array_equal(np.asarray(got), np.asarray(fused)), (
+        "interpret kernel drifted from jitted oracle"
+    )
+    eager = ref.nttd_decode_tile(idx, *ws)
+    tol = 1e-5 if dtype == jnp.float32 else 0.1
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(eager, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_decode_tile_non_multiple_batch():
+    """b=33 with tile_b=16: the wrapper pads the batch to a tile multiple
+    and slices the result back."""
+    idx, ws = _decode_tile_args(33, 3, 7, 16, 8, jnp.float32)
+    got = ops.nttd_decode_tile(idx, *ws, impl="pallas_interpret", tile_b=16)
+    fused = ops.nttd_decode_tile(idx, *ws, impl="fused")
+    assert got.shape == (33,)
+    assert np.array_equal(np.asarray(got), np.asarray(fused))
+
+
+def test_decode_tile_empty_batch():
+    idx, ws = _decode_tile_args(0, 3, 7, 16, 8, jnp.float32)
+    for impl in ("pallas_interpret", "fused", "ref", "auto"):
+        out = ops.nttd_decode_tile(idx, *ws, impl=impl)
+        assert out.shape == (0,)
+        assert out.dtype == ws[0].dtype
+
+
+def test_decode_tile_rejects_short_chain():
+    idx, ws = _decode_tile_args(8, 2, 7, 16, 8, jnp.float32)
+    with pytest.raises(ValueError, match="T >= 2"):
+        ops.nttd_decode_tile(idx[:, :1], *(w if i else w[:1] for i, w in enumerate(ws)))
+
+
+def test_fused_apply_matches_ref_apply():
+    """kernel_impl='fused' routes nttd.apply through the one-program
+    decode; values must match the per-op ref chain."""
+    import jax
+
+    from repro.core import nttd
+    from repro.core.folding import make_folding_spec
+
+    spec = make_folding_spec((20, 18, 12))
+    cfg_ref = nttd.NTTDConfig(rank=6, hidden=12, kernel_impl="ref")
+    cfg_fused = nttd.NTTDConfig(rank=6, hidden=12, kernel_impl="fused")
+    params = nttd.init_params(jax.random.PRNGKey(3), spec, cfg_ref)
+    rng = np.random.default_rng(5)
+    pos = jnp.asarray(
+        np.stack([rng.integers(0, s, 257) for s in spec.shape], axis=1), jnp.int32
+    )
+    want = nttd.apply_at_positions(params, pos, spec, cfg_ref)
+    got = nttd.apply_at_positions(params, pos, spec, cfg_fused)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
