@@ -15,6 +15,11 @@ fails CI when a headline metric regresses more than ``--tolerance``
                               (BENCH_fleet_procs.json, the multi-process cell)
 - ``kernels.decode_tile_entries_per_sec`` / ``kernels.decode_tile_fused_speedup``
                               (BENCH_kernels.json, the fused decode roofline)
+- ``fig10.bytes_ratio`` / ``fig10.chain_fitness``
+                              (BENCH_fig10.json, the deterministic TT cell of
+                              the versioned-payload benchmark: independent
+                              bytes-per-version over delta-chain bytes, and
+                              the chain's reconstruction fitness)
 
 Metrics whose BENCH file is absent are skipped unless named in
 ``--require`` (CI's tier1 job requires stream+fleet+kernels, the
@@ -88,6 +93,23 @@ GROUPS = {
                     r["p99_ms"] for r in _warm(runs) if r["p99_ms"] is not None
                 ),
                 False,
+            ),
+        },
+    ),
+    "fig10": (
+        "BENCH_fig10.json",
+        {
+            "bytes_ratio": (
+                lambda runs: max(
+                    r["bytes_ratio"] for r in runs if r["codec"] == "ttd"
+                ),
+                True,
+            ),
+            "chain_fitness": (
+                lambda runs: max(
+                    r["chain_fitness_mean"] for r in runs if r["codec"] == "ttd"
+                ),
+                True,
             ),
         },
     ),

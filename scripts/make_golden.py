@@ -1,0 +1,97 @@
+"""Regenerate the checked-in golden containers under tests/golden/.
+
+One tiny payload per on-disk format the loaders promise to keep reading:
+
+* ``v2_nttd.bin``      — legacy headerless NTTD blob (pre-container)
+* ``v3_mono.tcdc``     — monolithic v3 container (TT payload)
+* ``v3_chunked.tcdc``  — chunked v3 container with entry ranges
+* ``v4_delta.tcdc``    — delta-coded v4 container (keyframe + 2 deltas)
+
+``expected.npz`` freezes probe indices and the decoded values at write
+time; ``tests/test_golden.py`` replays every file through ``load_bytes``
+and the serve layer and compares against it.  The payloads are built
+from seeded rng state (TT cores drawn directly, NTTD fitted with a fixed
+seed) so regeneration is reproducible, but the CONTRACT is the checked-in
+bytes: only rerun this when the formats gain a new golden, and check in
+the result.
+
+Run from the repo root:  PYTHONPATH=src python scripts/make_golden.py
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.codecs import container, get_codec
+from repro.codecs.adapters import TTEncoded
+from repro.core import ttd
+from repro.stream import write_chunked
+from repro.temporal import VersionedStore
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
+SHAPE = (6, 5, 4)
+
+
+def _tt_encoded(seed: int, rank: int = 3) -> TTEncoded:
+    """A TT payload from seeded rng cores — no SVD, bit-reproducible."""
+    rng = np.random.default_rng(seed)
+    ranks = [1, rank, rank, 1]
+    cores = [
+        rng.standard_normal((ranks[k], n, ranks[k + 1])).astype(np.float32)
+        for k, n in enumerate(SHAPE)
+    ]
+    return TTEncoded(ttd.TTDecomposition(cores))
+
+
+def _probe_indices(rng: np.random.Generator, n: int = 64) -> np.ndarray:
+    return np.stack([rng.integers(0, s, n) for s in SHAPE], axis=1)
+
+
+def main() -> None:
+    os.makedirs(GOLDEN, exist_ok=True)
+    rng = np.random.default_rng(2026)
+    idx = _probe_indices(rng)
+    expected: dict[str, np.ndarray] = {"indices": idx}
+
+    # v2: headerless NTTD body, the pre-container format
+    x = rng.random(SHAPE).astype(np.float32)
+    enc2 = get_codec("nttd").fit(
+        x, rank=2, hidden=4, epochs=2, batch_size=64, eval_batch=64,
+        init_reorder=False, update_reorder=False, seed=0,
+    )
+    with open(os.path.join(GOLDEN, "v2_nttd.bin"), "wb") as f:
+        f.write(enc2.to_bytes())
+    expected["v2_nttd"] = np.asarray(enc2.decode_at(idx), np.float64)
+
+    # v3 monolithic + v3 chunked share one TT payload
+    enc3 = _tt_encoded(seed=3)
+    container.save_file(os.path.join(GOLDEN, "v3_mono.tcdc"), enc3)
+    write_chunked(os.path.join(GOLDEN, "v3_chunked.tcdc"), enc3, chunk_bytes=512)
+    expected["v3"] = np.asarray(enc3.decode_at(idx), np.float64)
+
+    # v4: TT keyframe + 2 rank-1 residual versions (keyframes every 4)
+    versions = [np.asarray(_tt_encoded(seed=3).to_dense(), np.float32)]
+    for k in range(2):
+        bump = _tt_encoded(seed=40 + k, rank=1)
+        versions.append(versions[-1] + 0.05 * np.asarray(bump.to_dense(), np.float32))
+    path4 = os.path.join(GOLDEN, "v4_delta.tcdc")
+    with VersionedStore.create(
+        path4, "ttd", keyframe_interval=4, chunk_bytes=512,
+        keyframe_opts={"max_rank": 4}, delta_opts={"max_rank": 2},
+    ) as store:
+        for v in versions:
+            store.append(v)
+    with VersionedStore.open(path4) as reader:
+        for v in range(reader.n_versions):
+            expected[f"v4_version{v}"] = np.asarray(
+                reader.decode_at(idx, version=v), np.float64
+            )
+
+    np.savez(os.path.join(GOLDEN, "expected.npz"), **expected)
+    for name in sorted(os.listdir(GOLDEN)):
+        print(f"{name}: {os.path.getsize(os.path.join(GOLDEN, name))} bytes")
+
+
+if __name__ == "__main__":
+    main()

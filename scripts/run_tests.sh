@@ -10,6 +10,7 @@
 #     scripts/run_tests.sh fleet-smoke      # 3-instance in-process fleet
 #     scripts/run_tests.sh fleet-procs-smoke  # 3 OS-process workers (sockets)
 #     scripts/run_tests.sh kernels          # kernel tests + fused-decode roofline
+#     scripts/run_tests.sh temporal         # versioned payloads + fig10 smoke
 #     scripts/run_tests.sh bench-gate       # BENCH_*.json vs committed baseline
 #     scripts/run_tests.sh -m 'not slow'    # pytest passthrough (custom select)
 #
@@ -92,6 +93,19 @@ phase_kernels() {
     echo "kernels OK: $(tr -d '\n' < benchmarks/results/BENCH_kernels.json | head -c 200)"
 }
 
+phase_temporal() {
+    # Versioned payloads: the v4 delta-container suite (writer discipline,
+    # store round-trips, single-vs-fleet bit-identity) plus the golden
+    # backward-compat matrix (legacy v2 / monolithic v3 / chunked v3 / v4
+    # fixtures must keep decoding to their frozen values), then the fig10
+    # smoke — delta chains must need >= 3x fewer bytes per version than
+    # independent fits at matched fitness (BENCH_fig10.json joins the gate).
+    python -m pytest -x -q tests/test_temporal.py tests/test_golden.py
+    python -m benchmarks.fig10_temporal --smoke
+    test -s benchmarks/results/BENCH_fig10.json
+    echo "temporal OK: $(tr -d '\n' < benchmarks/results/BENCH_fig10.json | head -c 200)"
+}
+
 phase_bench_gate() {
     # Fail on >30% regression of the headline BENCH metrics vs the
     # committed baseline (scripts/check_bench.py --update reseeds it).
@@ -106,6 +120,7 @@ case "${1:-all}" in
     fleet-smoke)       phase_fleet_smoke ;;
     fleet-procs-smoke) phase_fleet_procs_smoke ;;
     kernels)           phase_kernels ;;
+    temporal)          phase_temporal ;;
     bench-gate)        phase_bench_gate ;;
     all)
         phase_registry
@@ -115,6 +130,7 @@ case "${1:-all}" in
         phase_fleet_smoke
         phase_fleet_procs_smoke
         phase_kernels
+        phase_temporal
         phase_bench_gate
         ;;
     *)

@@ -13,15 +13,37 @@ as a streaming fit progresses, indexed by a footer so the file is valid
 the moment the writer closes — no seeking back to patch a length field:
 
     header (as above) | chunk bytes ... | footer | u64 footer_len | 'TCDX'
-    footer = u32 n_chunks | n x (u64 offset | u64 length | u32 crc32)
+    footer = chunk index | [ranges block] | [version-index block]
+    chunk index   = u32 n_chunks | n x (u64 offset | u64 length | u32 crc32)
+    ranges block  = 'TCDR' | n x (u64 entry_start | u64 entry_stop)
+    version index = 'TCDV' | u32 n_versions
+                           | n x (i64 base | u32 chunk_start | u32 chunk_stop)
 
-The concatenated chunks ARE the codec's ``Encoded.to_bytes()`` body, so
-every codec gets chunked persistence for free, and readers that want the
-whole payload just join the chunks.  ``load_bytes`` accepts monolithic
-v3, chunked v3, and bare legacy v2 blobs (headerless NTTD payloads
-written by older checkpoints); ``open_chunks`` exposes the index without
-touching chunk bytes, which is what the serve layer's lazy mmap-backed
-``load_stream`` builds on.
+The footer blocks after the chunk index are optional and magic-tagged,
+parsed in the fixed order above; any trailing bytes the blocks do not
+account for make the footer corrupt.
+
+Delta layout (container **v4**: ``u16 version=4`` with
+``FLAG_CHUNKED | FLAG_DELTA``, written by ``repro.stream.writer`` in
+delta mode / ``repro.temporal.VersionedStore``) stores a SEQUENCE of
+related tensors in one file.  The version-index block partitions the
+chunk index into per-version chunk ranges: version ``v``'s codec body is
+the concatenation of ``chunks[chunk_start:chunk_stop)``.  A version with
+``base == -1`` is a keyframe (its body decodes stand-alone); ``base == k``
+marks a delta whose decode must be ADDED to version ``k``'s decode, so
+reconstructing version ``v`` walks the base chain back to a keyframe and
+sums the component decodes.  Version 0 is always a keyframe and bases
+only point backwards, so every chain terminates.  Plain single-tensor
+files stay v3 — v4 is only ever written for delta files.
+
+The concatenated chunks of a v3 file (or of one v4 version) ARE the
+codec's ``Encoded.to_bytes()`` body, so every codec gets chunked and
+delta persistence for free.  ``load_bytes`` accepts monolithic v3,
+chunked v3, bare legacy v2 blobs (headerless NTTD payloads written by
+older checkpoints), and v4 delta files (decoded at their latest version
+through ``repro.temporal``); ``open_container``/``open_chunks`` expose
+the index without touching chunk bytes, which is what the serve layer's
+lazy mmap-backed ``load_stream`` builds on.
 
 Array (de)serialization helpers are shared by the adapter bodies:
 ``write_array``/``read_array`` preserve dtype and shape so float64
@@ -41,9 +63,12 @@ from repro.codecs.base import Encoded, get_codec
 
 MAGIC = b"TCDC"
 VERSION = 3
+DELTA_VERSION = 4  # container carrying a version-index (delta chain) block
 FOOTER_MAGIC = b"TCDX"
 RANGES_MAGIC = b"TCDR"  # optional per-chunk entry-range block in the footer
+VINDEX_MAGIC = b"TCDV"  # optional version-index block in the footer
 FLAG_CHUNKED = 0x01
+FLAG_DELTA = 0x02  # chunk index is partitioned into versions (v4 only)
 _LEGACY_NTTD_VERSION = 2
 _TRAILER_LEN = 12  # u64 footer_len + FOOTER_MAGIC
 
@@ -123,14 +148,34 @@ class ChunkEntry:
     entry_stop: int | None = None
 
 
-def pack_header(codec_name: str, flags: int = 0) -> bytes:
+@dataclasses.dataclass(frozen=True)
+class VersionEntry:
+    """One version in a v4 delta file's version-index block.
+
+    ``base == -1`` marks a keyframe; otherwise the version's decode is a
+    residual to be ADDED to version ``base``'s decode.  The version's codec
+    body is the concatenation of ``chunks[chunk_start:chunk_stop)``.
+    """
+
+    base: int
+    chunk_start: int
+    chunk_stop: int
+
+    @property
+    def is_keyframe(self) -> bool:
+        return self.base < 0
+
+
+def pack_header(codec_name: str, flags: int = 0, version: int = VERSION) -> bytes:
     name = codec_name.encode("ascii")
     if not name or len(name) > 255:
         raise ValueError(f"bad codec id {codec_name!r}")
-    return MAGIC + struct.pack("<HBB", VERSION, flags, len(name)) + name
+    return MAGIC + struct.pack("<HBB", version, flags, len(name)) + name
 
 
-def pack_footer(chunks: list[ChunkEntry]) -> bytes:
+def pack_footer(
+    chunks: list[ChunkEntry], versions: list[VersionEntry] | None = None
+) -> bytes:
     footer = struct.pack("<I", len(chunks)) + b"".join(
         struct.pack("<QQI", c.offset, c.length, c.crc) for c in chunks
     )
@@ -138,6 +183,10 @@ def pack_footer(chunks: list[ChunkEntry]) -> bytes:
     if chunks and all(c.entry_start is not None for c in chunks):
         footer += RANGES_MAGIC + b"".join(
             struct.pack("<QQ", c.entry_start, c.entry_stop) for c in chunks
+        )
+    if versions is not None:
+        footer += VINDEX_MAGIC + struct.pack("<I", len(versions)) + b"".join(
+            struct.pack("<qII", v.base, v.chunk_start, v.chunk_stop) for v in versions
         )
     return footer + struct.pack("<Q", len(footer)) + FOOTER_MAGIC
 
@@ -153,36 +202,92 @@ def _parse_header(data) -> tuple[int, str, int]:
     return flags, name, 8 + name_len
 
 
-def _parse_chunk_index(data, header_end: int) -> list[ChunkEntry]:
+def _validate_versions(
+    versions: list[VersionEntry], n_chunks: int, ctx: str = ""
+) -> None:
+    """Version entries must contiguously partition [0, n_chunks) from 0 and
+    form well-founded base chains (keyframe 0, bases strictly backwards)."""
+    if not versions:
+        raise ValueError(f"{ctx}corrupt payload: empty version index")
+    expect = 0
+    for i, v in enumerate(versions):
+        if v.chunk_start != expect or v.chunk_stop <= v.chunk_start:
+            raise ValueError(f"{ctx}corrupt payload: version {i} chunk range")
+        expect = v.chunk_stop
+        if i == 0 and not v.is_keyframe:
+            raise ValueError(f"{ctx}corrupt payload: version 0 must be a keyframe")
+        if not v.is_keyframe and v.base >= i:
+            raise ValueError(f"{ctx}corrupt payload: version {i} base {v.base}")
+    if expect != n_chunks:
+        raise ValueError(f"{ctx}corrupt payload: version index does not cover chunks")
+
+
+def _parse_footer(
+    data, header_end: int, ctx: str = ""
+) -> tuple[list[ChunkEntry], list[VersionEntry] | None]:
+    """Parse the trailer-addressed footer: chunk index, then the optional
+    magic-tagged TCDR (entry ranges) and TCDV (version index) blocks."""
     if len(data) < header_end + _TRAILER_LEN:
-        raise ValueError("truncated payload: chunk trailer")
+        raise ValueError(f"{ctx}truncated payload: chunk trailer")
     if bytes(data[-4:]) != FOOTER_MAGIC:
-        raise ValueError("truncated payload: chunk footer magic missing")
+        raise ValueError(f"{ctx}truncated payload: chunk footer magic missing")
     (footer_len,) = struct.unpack("<Q", bytes(data[-12:-4]))
     footer_start = len(data) - _TRAILER_LEN - footer_len
     if footer_start < header_end:
-        raise ValueError("corrupt payload: chunk footer overlaps header")
+        raise ValueError(f"{ctx}corrupt payload: chunk footer overlaps header")
     footer = bytes(data[footer_start : footer_start + footer_len])
     if len(footer) < 4:
-        raise ValueError("truncated payload: chunk index")
+        raise ValueError(f"{ctx}truncated payload: chunk index")
     (n,) = struct.unpack("<I", footer[:4])
-    base_len = 4 + 20 * n
+    pos = 4 + 20 * n
+    if len(footer) < pos:
+        raise ValueError(f"{ctx}corrupt payload: chunk index length mismatch")
     ranges: list[tuple[int, int]] | None = None
-    if len(footer) == base_len + 4 + 16 * n and footer[base_len : base_len + 4] == RANGES_MAGIC:
+    if footer[pos : pos + 4] == RANGES_MAGIC:
+        if len(footer) < pos + 4 + 16 * n:
+            raise ValueError(f"{ctx}corrupt payload: chunk index length mismatch")
         ranges = [
-            struct.unpack("<QQ", footer[base_len + 4 + 16 * i : base_len + 20 + 16 * i])
+            struct.unpack("<QQ", footer[pos + 4 + 16 * i : pos + 20 + 16 * i])
             for i in range(n)
         ]
-    elif len(footer) != base_len:
-        raise ValueError("corrupt payload: chunk index length mismatch")
+        pos += 4 + 16 * n
+    versions: list[VersionEntry] | None = None
+    if footer[pos : pos + 4] == VINDEX_MAGIC:
+        if len(footer) < pos + 8:
+            raise ValueError(f"{ctx}truncated payload: version index")
+        (nv,) = struct.unpack("<I", footer[pos + 4 : pos + 8])
+        pos += 8
+        if len(footer) < pos + 16 * nv:
+            raise ValueError(f"{ctx}truncated payload: version index")
+        versions = [
+            VersionEntry(*struct.unpack("<qII", footer[pos + 16 * i : pos + 16 * (i + 1)]))
+            for i in range(nv)
+        ]
+        pos += 16 * nv
+        _validate_versions(versions, n, ctx)
+    if pos != len(footer):
+        raise ValueError(f"{ctx}corrupt payload: chunk index length mismatch")
     chunks = []
     for i in range(n):
         off, length, crc = struct.unpack("<QQI", footer[4 + 20 * i : 24 + 20 * i])
         if off < header_end or off + length > footer_start:
-            raise ValueError("corrupt payload: chunk outside data region")
+            raise ValueError(f"{ctx}corrupt payload: chunk outside data region")
         start, stop = ranges[i] if ranges is not None else (None, None)
         chunks.append(ChunkEntry(off, length, crc, start, stop))
-    return chunks
+    return chunks, versions
+
+
+def _check_delta(
+    data, flags: int, header_end: int, ctx: str = ""
+) -> tuple[list[ChunkEntry], list[VersionEntry]]:
+    """Parse + validate a v4 footer: both delta flags and a version index
+    are mandatory, so a v4 file is never silently read as a single tensor."""
+    if not (flags & FLAG_CHUNKED) or not (flags & FLAG_DELTA):
+        raise ValueError(f"{ctx}corrupt payload: v4 container without delta flags")
+    chunks, versions = _parse_footer(data, header_end, ctx)
+    if versions is None:
+        raise ValueError(f"{ctx}corrupt payload: v4 container missing version index")
+    return chunks, versions
 
 
 def read_chunk(data, chunk: ChunkEntry) -> bytes:
@@ -214,11 +319,28 @@ def load_bytes(data: bytes) -> Encoded:
         from repro.codecs.adapters import NTTDEncoded
 
         return NTTDEncoded.from_bytes(bytes(data))
-    if version != VERSION:
+    if version not in (VERSION, DELTA_VERSION):
         raise ValueError(f"unsupported container version {version}")
     flags, name, off = _parse_header(data)
+    if version == DELTA_VERSION:
+        chunks, versions = _check_delta(data, flags, off)
+        try:
+            codec = get_codec(name)
+        except KeyError:
+            raise ValueError(f"unknown codec id {name!r} in container") from None
+        from repro.temporal.delta import load_chain
+
+        bodies = [
+            b"".join(read_chunk(data, c) for c in chunks[v.chunk_start : v.chunk_stop])
+            for v in versions
+        ]
+        return load_chain(codec, bodies, versions)
+    if flags & FLAG_DELTA:
+        raise ValueError("corrupt payload: delta flag on a v3 container")
     if flags & FLAG_CHUNKED:
-        chunks = _parse_chunk_index(data, off)
+        chunks, versions = _parse_footer(data, off)
+        if versions is not None:
+            raise ValueError("corrupt payload: version index on a v3 container")
         body = b"".join(read_chunk(data, c) for c in chunks)
     else:
         if len(data) < off + 12:
@@ -251,48 +373,115 @@ def load_file(path: str) -> Encoded:
         return load_bytes(f.read())
 
 
-def open_chunks(path: str) -> tuple[str, list[ChunkEntry], memoryview]:
-    """Open a v3 file lazily: parse header + chunk index, mmap the rest.
+@dataclasses.dataclass
+class OpenContainer:
+    """Lazily opened container: header + footer parsed, chunk bytes mmapped.
 
-    Returns ``(codec_name, chunks, mmap-backed view)`` without reading any
-    chunk bytes — the serve layer materializes chunks on demand through
-    ``read_chunk``.  Monolithic files come back as one pseudo-chunk, so
-    callers need not care how the payload was written.
+    ``versions`` is ``None`` for a plain v3 (single tensor) file and the
+    validated version index for a v4 delta file.
+    """
+
+    codec: str
+    flags: int
+    chunks: list[ChunkEntry]
+    versions: list[VersionEntry] | None
+    view: memoryview
+
+    @property
+    def is_versioned(self) -> bool:
+        return self.versions is not None
+
+    def close(self) -> None:
+        mm = self.view.obj
+        self.view.release()
+        if hasattr(mm, "close"):
+            mm.close()
+
+
+def open_container(path: str) -> OpenContainer:
+    """Open a v3/v4 file lazily: parse header + footer, mmap the rest.
+
+    No chunk bytes are read — the serve layer materializes chunks on
+    demand through ``read_chunk``.  Monolithic v3 files come back as one
+    pseudo-chunk, so callers need not care how the payload was written.
     """
     with open(path, "rb") as f:
         mm = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
     view = memoryview(mm)
-    if len(view) < 6 or bytes(view[:4]) != MAGIC:
-        raise ValueError(f"{path}: not a TensorCodec container")
-    (version,) = struct.unpack("<H", bytes(view[4:6]))
-    if version != VERSION:
+    try:
+        if len(view) < 6 or bytes(view[:4]) != MAGIC:
+            raise ValueError(f"{path}: not a TensorCodec container")
+        (version,) = struct.unpack("<H", bytes(view[4:6]))
+        if version not in (VERSION, DELTA_VERSION):
+            raise ValueError(
+                f"{path}: lazy open needs a v{VERSION}/v{DELTA_VERSION} "
+                f"container, got v{version}"
+            )
+        flags, name, off = _parse_header(view)
+        ctx = f"{path}: "
+        if version == DELTA_VERSION:
+            chunks, versions = _check_delta(view, flags, off, ctx)
+            return OpenContainer(name, flags, chunks, versions, view)
+        if flags & FLAG_DELTA:
+            raise ValueError(f"{ctx}corrupt payload: delta flag on a v3 container")
+        if flags & FLAG_CHUNKED:
+            chunks, versions = _parse_footer(view, off, ctx)
+            if versions is not None:
+                raise ValueError(
+                    f"{ctx}corrupt payload: version index on a v3 container"
+                )
+        else:
+            if len(view) < off + 12:
+                raise ValueError(f"{ctx}truncated payload: codec id")
+            body_len, crc = struct.unpack("<QI", bytes(view[off : off + 12]))
+            if len(view) < off + 12 + body_len:
+                raise ValueError(f"{ctx}truncated payload: body")
+            chunks = [ChunkEntry(off + 12, body_len, crc)]
+        return OpenContainer(name, flags, chunks, None, view)
+    except Exception:
+        view.release()
+        mm.close()
+        raise
+
+
+def open_chunks(path: str) -> tuple[str, list[ChunkEntry], memoryview]:
+    """Back-compat lazy open for single-tensor (v3) callers.
+
+    Returns ``(codec_name, chunks, mmap-backed view)``; rejects v4 delta
+    files, whose chunk list only makes sense alongside the version index
+    (use :func:`open_container` for those).
+    """
+    oc = open_container(path)
+    if oc.is_versioned:
+        oc.close()
         raise ValueError(
-            f"{path}: lazy open needs a v{VERSION} container, got v{version}"
+            f"{path}: v{DELTA_VERSION} delta container needs open_container"
         )
-    flags, name, off = _parse_header(view)
-    if flags & FLAG_CHUNKED:
-        chunks = _parse_chunk_index(view, off)
-    else:
-        if len(view) < off + 12:
-            raise ValueError("truncated payload: codec id")
-        body_len, crc = struct.unpack("<QI", bytes(view[off : off + 12]))
-        if len(view) < off + 12 + body_len:
-            raise ValueError("truncated payload: body")
-        chunks = [ChunkEntry(off + 12, body_len, crc)]
-    return name, chunks, view
+    return oc.codec, oc.chunks, oc.view
+
+
+def container_index(
+    path: str,
+) -> tuple[str, list[ChunkEntry], list[VersionEntry] | None]:
+    """Parse a v3/v4 file's header + footer WITHOUT keeping it open.
+
+    The fleet router builds its consistent-hash ring over exactly these
+    chunk entries (one key per chunk; entry ranges, when recorded, tell it
+    which flat indices each chunk routes, and the version index tells it
+    which chunks belong to which version).  Unlike :func:`open_container`
+    no mmap outlives the call — the ring only needs the index, never
+    chunk bytes.
+    """
+    oc = open_container(path)
+    oc.close()
+    return oc.codec, oc.chunks, oc.versions
 
 
 def chunk_index(path: str) -> tuple[str, list[ChunkEntry]]:
-    """Parse a v3 file's header + chunk index WITHOUT keeping it open.
-
-    The fleet router builds its consistent-hash ring over exactly these
-    entries (one key per chunk; entry ranges, when recorded, tell it which
-    flat indices each chunk routes).  Unlike :func:`open_chunks` no mmap
-    outlives the call — the ring only needs the index, never chunk bytes.
-    """
-    name, chunks, view = open_chunks(path)
-    mm = view.obj
-    view.release()
-    if hasattr(mm, "close"):
-        mm.close()
+    """Back-compat :func:`container_index` for single-tensor callers."""
+    name, chunks, versions = container_index(path)
+    if versions is not None:
+        raise ValueError(
+            f"{path}: v{DELTA_VERSION} delta container needs container_index"
+        )
     return name, chunks

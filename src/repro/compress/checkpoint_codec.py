@@ -21,6 +21,8 @@ from __future__ import annotations
 
 import dataclasses
 import io
+import json
+import os
 from typing import Any
 
 import numpy as np
@@ -105,6 +107,170 @@ def compress_tree(tree, cfg: CodecCheckpointConfig | None = None):
         stats["leaves_raw"] += 1
     stats["ratio"] = stats["raw_bytes"] / max(stats["compressed_bytes"], 1)
     return out, stats
+
+
+@dataclasses.dataclass
+class VersionedCheckpointConfig:
+    """Knobs for :class:`VersionedCheckpointer` (delta-coded v4 stores)."""
+
+    codec: str = "nttd"              # any name in repro.codecs.available()
+    min_elements: int = 1 << 16      # only delta-code leaves at least this big
+    min_fitness: float = 0.95        # chain gate; below -> fresh keyframe
+    keyframe_interval: int = 8       # bound on decode-chain depth
+    chunk_bytes: int = 1 << 20
+    delta_passes: int = 2
+    keyframe_opts: dict[str, Any] | None = None  # passed to Codec.fit
+    delta_opts: dict[str, Any] | None = None     # passed to the stream fitter
+
+
+class VersionedCheckpointer:
+    """Checkpoint steps as versions of per-leaf delta stores.
+
+    Step ``N+1`` of every large weight tensor is fitted as a residual
+    against the reconstruction of step ``N`` (``repro.temporal``) — a
+    training run's consecutive checkpoints differ by one optimizer step,
+    so the residual is far cheaper to encode than the tensor.  Leaves
+    below ``min_elements`` (or below the fitness gate on their very first
+    step) are demoted to raw ``.npz`` per step, permanently: a leaf the
+    codec cannot represent at step 0 will not start representing it later.
+
+    Layout under ``directory``::
+
+        manifest.json          key -> {kind, file, dtype, shape}; n_steps
+        leaf<i>.tcdc           one v4 delta container per codec leaf
+        raw_step<k>.npz        all raw leaves of step k
+
+    Every ``save_step`` ends with the stores synced and the manifest
+    rewritten, so the directory restores after a crash mid-run.  A
+    reopened checkpointer is restore-only: resuming appends against
+    existing stores is not supported (writers start fresh files).
+    """
+
+    def __init__(self, directory: str, cfg: VersionedCheckpointConfig | None = None):
+        from repro.temporal import VersionedStore
+
+        self.directory = directory
+        self.cfg = cfg or VersionedCheckpointConfig()
+        self._store_cls = VersionedStore
+        os.makedirs(directory, exist_ok=True)
+        self._stores: dict[str, Any] = {}   # key -> VersionedStore
+        self._leaves: dict[str, dict] = {}  # key -> manifest entry
+        self._n_steps = 0
+        manifest = os.path.join(directory, "manifest.json")
+        if os.path.exists(manifest):
+            with open(manifest) as f:
+                m = json.load(f)
+            self._n_steps = m["n_steps"]
+            self._leaves = m["leaves"]
+
+    @property
+    def n_steps(self) -> int:
+        return self._n_steps
+
+    def _open_store(self, key: str, fname: str):
+        cfg = self.cfg
+        self._stores[key] = self._store_cls(
+            os.path.join(self.directory, fname),
+            cfg.codec,
+            keyframe_interval=cfg.keyframe_interval,
+            chunk_bytes=cfg.chunk_bytes,
+            keyframe_opts=cfg.keyframe_opts,
+            delta_opts=cfg.delta_opts,
+            delta_passes=cfg.delta_passes,
+            rekey_below=cfg.min_fitness,
+        )
+
+    def save_step(self, tree) -> dict:
+        """Append one checkpoint step; returns per-step stats."""
+        from repro.train.checkpoint import _flatten
+
+        cfg = self.cfg
+        step = self._n_steps
+        stats = {"step": step, "bytes": 0, "leaves_store": 0, "leaves_raw": 0,
+                 "keyframes": 0, "fitness_min": 1.0}
+        raw: dict[str, np.ndarray] = {}
+        for i, (key, leaf) in enumerate(_flatten(tree)):
+            arr = np.asarray(leaf)
+            entry = self._leaves.get(key)
+            if entry is None:
+                if step != 0:
+                    raise ValueError(f"leaf {key!r} appeared after step 0")
+                eligible = arr.size >= cfg.min_elements and arr.ndim >= 2
+                entry = {
+                    "kind": "store" if eligible else "raw",
+                    "file": f"leaf{i}.tcdc" if eligible else None,
+                    "dtype": str(arr.dtype),
+                    "shape": list(arr.shape),
+                }
+                self._leaves[key] = entry
+            if entry["kind"] == "store":
+                if key not in self._stores:
+                    if step > 0:
+                        raise ValueError(
+                            "reopened VersionedCheckpointer is restore-only; "
+                            "start a new directory to keep appending"
+                        )
+                    self._open_store(key, entry["file"])
+                st = self._stores[key].append(arr.astype(np.float32))
+                if step == 0 and st["fitness"] < cfg.min_fitness:
+                    # below the gate on its FIRST step: the codec cannot
+                    # represent this leaf — demote it to raw permanently
+                    self._stores.pop(key).close()
+                    os.remove(os.path.join(self.directory, entry["file"]))
+                    entry.update(kind="raw", file=None)
+                else:
+                    stats["bytes"] += st["bytes"]
+                    stats["leaves_store"] += 1
+                    stats["keyframes"] += int(st["keyframe"])
+                    stats["fitness_min"] = min(stats["fitness_min"], st["fitness"])
+            if entry["kind"] == "raw":
+                raw[key.replace("/", "__")] = arr
+        if raw:
+            path = os.path.join(self.directory, f"raw_step{step}.npz")
+            np.savez(path, **raw)
+            stats["bytes"] += os.path.getsize(path)
+            stats["leaves_raw"] = len(raw)
+        self._n_steps = step + 1
+        self._write_manifest()
+        return stats
+
+    def _write_manifest(self) -> None:
+        tmp = os.path.join(self.directory, "manifest.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump({"n_steps": self._n_steps, "leaves": self._leaves}, f, indent=1)
+        os.replace(tmp, os.path.join(self.directory, "manifest.json"))
+
+    def restore_step(self, step: int, template):
+        """Rebuild the tree at ``step`` (lossy for store-backed leaves)."""
+        from repro.temporal import VersionedStore
+        from repro.train.checkpoint import _unflatten_into
+
+        if not 0 <= step < self._n_steps:
+            raise ValueError(f"step {step} out of range [0, {self._n_steps})")
+        values: dict[str, np.ndarray] = {}
+        raw_path = os.path.join(self.directory, f"raw_step{step}.npz")
+        raw = np.load(raw_path) if os.path.exists(raw_path) else {}
+        for key, entry in self._leaves.items():
+            dtype = np.dtype(entry["dtype"])
+            if entry["kind"] == "raw":
+                values[key] = np.asarray(raw[key.replace("/", "__")])
+            else:
+                with VersionedStore.open(
+                    os.path.join(self.directory, entry["file"])
+                ) as reader:
+                    values[key] = reader.decode(version=step).astype(dtype)
+        return _unflatten_into(template, values)
+
+    def close(self) -> None:
+        for store in self._stores.values():
+            store.close()
+        self._stores.clear()
+
+    def __enter__(self) -> "VersionedCheckpointer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
 
 
 def decompress_tree(payload: dict, template):

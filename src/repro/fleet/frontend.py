@@ -109,7 +109,7 @@ class FleetFrontend:
         self._paths: dict[str, tuple[str, int | None]] = {}
         #: payload -> group id -> replica list, rebuilt by apply_ownership
         self._group_owners: dict[str, dict[int, list[str]]] = {}
-        self._queue: list[tuple[int, str, np.ndarray]] = []
+        self._queue: list[tuple[int, str, np.ndarray, int | None]] = []
         self._next_ticket = 0
         #: results resolved by drain()/decode_at(), delivered by the next flush()
         self._drained: dict[int, np.ndarray] = {}
@@ -230,10 +230,11 @@ class FleetFrontend:
     def load_stream(
         self, name: str, path: str, *, tile_entries: int | None = None
     ) -> PayloadRoute:
-        """Register a container-v3 file fleet-wide: every instance mmaps
-        it lazily; the chunk index seeds the routing table; ownership
-        filters shard materialization and tile caching across the ring."""
-        codec_name, chunks = container.chunk_index(path)
+        """Register a container v3/v4 file fleet-wide: every instance
+        mmaps it lazily; the chunk index (and, for v4 delta files, the
+        version index) seeds the routing table; ownership filters shard
+        materialization and tile caching across the ring."""
+        codec_name, chunks, versions = container.container_index(path)
         live = [iid for iid in self.transports if iid not in self.excluded]
         if not live:
             raise TransportError(
@@ -251,7 +252,7 @@ class FleetFrontend:
             candidates = self.ring.owners(f"{name}/c0", len(self.transports))
             primary = next((i for i in candidates if i in live), live[0])
             shape = self.transports[primary].shape_of(name)
-            route = PayloadRoute(name, shape, chunks, tile_entries)
+            route = PayloadRoute(name, shape, chunks, tile_entries, versions)
         except Exception:
             # nothing half-registered: a corrupt chunk discovered at the
             # shape peek must not leave N-1 instances serving garbage —
@@ -319,21 +320,43 @@ class FleetFrontend:
             )
         return validate_indices(name, route.shape, indices)
 
-    def submit(self, name: str, indices: np.ndarray) -> int:
+    def _resolve_version(self, name: str, version: int | None) -> int | None:
+        """Pin a versioned payload's query to a concrete version id at
+        submit time (None -> latest), mirroring CodecService."""
+        route = self.routes[name]
+        if not route.versioned:
+            if version is not None:
+                raise ValueError(
+                    f"payload {name!r} is not versioned (version={version})"
+                )
+            return None
+        v = route.n_versions - 1 if version is None else int(version)
+        if not 0 <= v < route.n_versions:
+            raise ValueError(
+                f"{name}: version {v} out of range [0, {route.n_versions})"
+            )
+        return v
+
+    def submit(
+        self, name: str, indices: np.ndarray, version: int | None = None
+    ) -> int:
         """Queue a request; resolved by the next flush().  Validates
         eagerly so a malformed request can never poison a batch."""
         idx = self._validate(name, indices)
+        v = self._resolve_version(name, version)
         ticket = self._next_ticket
         self._next_ticket += 1
-        self._queue.append((ticket, name, idx))
+        self._queue.append((ticket, name, idx, v))
         return ticket
 
-    def decode_at(self, name: str, indices: np.ndarray) -> np.ndarray:
+    def decode_at(
+        self, name: str, indices: np.ndarray, version: int | None = None
+    ) -> np.ndarray:
         """Direct query: split by owner, fan out, reassemble in order.
         Any other queued tickets are resolved too — their results are
         held for the next flush(), and their failures (if any) stay in
         ``self.failed`` until then, mirroring CodecService semantics."""
-        ticket = self.submit(name, indices)
+        ticket = self.submit(name, indices, version=version)
         results = self.flush()
         value = results.pop(ticket, None)
         self._drained.update(results)  # don't lose concurrent tickets...
@@ -368,12 +391,12 @@ class FleetFrontend:
         results = self._drained
         self._drained = {}
         queue, self._queue = self._queue, []
-        # plan: per instance, (ticket, name, sub-indices, output positions)
-        plan: dict[str, list[tuple[int, str, np.ndarray, np.ndarray]]] = {
-            iid: [] for iid in self.transports
-        }
+        # plan: per instance, (ticket, name, version, sub-indices, positions)
+        plan: dict[
+            str, list[tuple[int, str, int | None, np.ndarray, np.ndarray]]
+        ] = {iid: [] for iid in self.transports}
         planned_bytes = dict.fromkeys(self.transports, 0)
-        for ticket, name, idx in queue:
+        for ticket, name, idx, version in queue:
             route = self.routes.get(name)
             if route is None:  # unloaded between submit and flush
                 self.failed[ticket] = KeyError(f"payload {name!r} unloaded")
@@ -381,7 +404,7 @@ class FleetFrontend:
             if not idx.shape[0]:  # empty request: answer locally
                 results[ticket] = np.empty(0, dtype=np.float64)
                 continue
-            gids = route.group_of(route.flat(idx))
+            gids = route.group_of(route.flat(idx), version)
             uniq, inv = np.unique(gids, return_inverse=True)
             counts = np.bincount(inv, minlength=len(uniq))
             group_owners = self._group_owners[name]
@@ -409,7 +432,7 @@ class FleetFrontend:
             owners = owner_by_gid[inv]
             for iid in np.unique(owners):
                 pos = np.nonzero(owners == iid)[0]
-                plan[iid].append((ticket, name, idx[pos], pos))
+                plan[iid].append((ticket, name, version, idx[pos], pos))
         # execute
         parts: dict[int, list[tuple[np.ndarray, np.ndarray]]] = {}
         part_failed: dict[int, Exception] = {}
@@ -417,8 +440,8 @@ class FleetFrontend:
             if items:
                 self._run_instance(iid, items, parts, part_failed)
         # reassemble in request order
-        sizes = {ticket: idx.shape[0] for ticket, _, idx in queue}
-        for ticket, _, idx in queue:
+        sizes = {ticket: idx.shape[0] for ticket, _, idx, _ in queue}
+        for ticket, _, idx, _ in queue:
             if ticket in results or ticket in self.failed:
                 continue  # empty request / failed before fan-out
             if ticket in part_failed:
@@ -434,7 +457,7 @@ class FleetFrontend:
     def _run_instance(
         self,
         iid: str,
-        items: list[tuple[int, str, np.ndarray, np.ndarray]],
+        items: list[tuple[int, str, int | None, np.ndarray, np.ndarray]],
         parts: dict[int, list[tuple[np.ndarray, np.ndarray]]],
         part_failed: dict[int, Exception],
     ) -> None:
@@ -447,7 +470,7 @@ class FleetFrontend:
         inflight = 0
         resolved: set[int] = set()  # tickets answered by an early flush
         try:
-            for ticket, name, sub_idx, pos in items:
+            for ticket, name, version, sub_idx, pos in items:
                 cost = sub_idx.shape[0] * _OUT_BYTES_PER_ENTRY + sub_idx.nbytes
                 if (
                     self.max_inflight_bytes is not None
@@ -458,7 +481,7 @@ class FleetFrontend:
                     self._flush_instance(iid, t, pending, parts, part_failed)
                     resolved.update(p[0] for p in pending)
                     pending, inflight = [], 0
-                rid = t.submit(name, sub_idx)
+                rid = t.submit(name, sub_idx, version=version)
                 pending.append((ticket, rid, pos))
                 inflight += cost
                 self._peak_inflight[iid] = max(self._peak_inflight[iid], inflight)

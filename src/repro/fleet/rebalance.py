@@ -140,10 +140,15 @@ def rebalance(
         for name, cached in tile_cache.items():
             old_owner = _owner_map(before.get(name, {}), 1)
             new_owner = _owner_map(after.get(name, {}), 1)
+            route = fleet.routes[name]
             n = 0
             for tid, values in cached.items():
-                gained = new_owner.get(tid, frozenset()) - old_owner.get(
-                    tid, frozenset()
+                # versioned payloads export COMPOSITE tile ids
+                # (version * n_tiles + tile); ownership rides on the base
+                # tile, so all versions of a tile move together
+                base = tid % route.n_tiles if route.versioned else tid
+                gained = new_owner.get(base, frozenset()) - old_owner.get(
+                    base, frozenset()
                 )
                 for iid in gained:
                     if iid in fleet.excluded:

@@ -106,14 +106,31 @@ class PayloadRoute:
         shape: tuple[int, ...],
         chunks: list[container.ChunkEntry],
         tile_entries: int | None = None,
+        versions: list[container.VersionEntry] | None = None,
     ):
         self.name = name
         self.shape = tuple(int(s) for s in shape)
         self.n_entries = int(np.prod(self.shape))
         self.tile_entries = int(tile_entries) if tile_entries else None
         self.n_chunks = len(chunks)
+        self.versions = list(versions) if versions is not None else None
         if not chunks:
             raise ValueError(f"payload {name!r} has no chunks to route")
+        if self.versions is not None:
+            # one chunk-start table per version: entry ranges restart at 0
+            # for every version's chunk run, so queries route to ABSOLUTE
+            # chunk ids via the version's own table
+            self._chunk_starts = None
+            self._version_starts = [
+                self._starts_for(chunks[v.chunk_start : v.chunk_stop])
+                for v in self.versions
+            ]
+        else:
+            self._chunk_starts = self._starts_for(chunks)
+
+    def _starts_for(self, chunks: list[container.ChunkEntry]) -> np.ndarray:
+        """Entry-start table for one contiguous chunk run, validated to
+        partition [0, n_entries); uniform split for legacy files."""
         if all(c.entry_start is not None for c in chunks):
             starts = [c.entry_start for c in chunks]
             stops = [c.entry_stop for c in chunks]
@@ -121,16 +138,16 @@ class PayloadRoute:
                 a != b for a, b in zip(starts[1:], stops[:-1])
             ) or stops[-1] != self.n_entries:
                 raise ValueError(
-                    f"payload {name!r}: recorded entry ranges do not "
+                    f"payload {self.name!r}: recorded entry ranges do not "
                     f"partition [0, {self.n_entries})"
                 )
-            self._chunk_starts = np.asarray(starts, dtype=np.int64)
-        else:  # legacy file without recorded ranges: uniform partition
-            self._chunk_starts = (
-                np.arange(self.n_chunks, dtype=np.int64)
-                * self.n_entries
-                // self.n_chunks
-            )
+            return np.asarray(starts, dtype=np.int64)
+        # legacy file without recorded ranges: uniform partition
+        return (
+            np.arange(len(chunks), dtype=np.int64)
+            * self.n_entries
+            // len(chunks)
+        )
 
     @property
     def n_tiles(self) -> int:
@@ -142,21 +159,39 @@ class PayloadRoute:
     def tiled(self) -> bool:
         return self.tile_entries is not None
 
+    @property
+    def versioned(self) -> bool:
+        return self.versions is not None
+
+    @property
+    def n_versions(self) -> int:
+        return len(self.versions) if self.versions is not None else 0
+
     # -- index space ---------------------------------------------------------
     def flat(self, indices: np.ndarray) -> np.ndarray:
         return multi_to_flat(indices, self.shape)
 
-    def chunk_of(self, flat: np.ndarray) -> np.ndarray:
-        """Chunk id whose entry range covers each flat index."""
+    def chunk_of(self, flat: np.ndarray, version: int | None = None) -> np.ndarray:
+        """ABSOLUTE chunk id whose entry range covers each flat index —
+        for versioned payloads, within ``version``'s chunk run (default:
+        latest), so every version's queries key distinct ring points."""
+        if self.versions is not None:
+            v = len(self.versions) - 1 if version is None else int(version)
+            ve = self.versions[v]
+            return ve.chunk_start + (
+                np.searchsorted(self._version_starts[v], flat, side="right") - 1
+            )
         return np.searchsorted(self._chunk_starts, flat, side="right") - 1
 
     def tile_of(self, flat: np.ndarray) -> np.ndarray:
         return flat // self.tile_entries
 
-    def group_of(self, flat: np.ndarray) -> np.ndarray:
+    def group_of(self, flat: np.ndarray, version: int | None = None) -> np.ndarray:
         """The ownership-group id per flat index: tile when tiled (fine-
-        grained sharding), else covering chunk."""
-        return self.tile_of(flat) if self.tiled else self.chunk_of(flat)
+        grained sharding, deliberately VERSION-INDEPENDENT so all versions
+        of a tile share one owner and base tiles are reused), else the
+        version's covering chunk."""
+        return self.tile_of(flat) if self.tiled else self.chunk_of(flat, version)
 
     # -- ring keys -----------------------------------------------------------
     def chunk_key(self, cid: int) -> str:

@@ -267,7 +267,9 @@ class Transport(Protocol):
     def unload(self, name: str) -> None: ...
     def payloads(self) -> list[str]: ...
     def shape_of(self, name: str) -> tuple[int, ...]: ...
-    def submit(self, name: str, indices: np.ndarray) -> int: ...
+    def submit(
+        self, name: str, indices: np.ndarray, version: int | None = None
+    ) -> int: ...
     def flush(self) -> tuple[dict[int, np.ndarray], dict[int, Exception]]: ...
     def drain(self) -> None: ...
     def stats(self) -> dict: ...
@@ -314,11 +316,11 @@ class LocalTransport:
     def shape_of(self, name) -> tuple[int, ...]:
         return self.service.shape_of(name)
 
-    def submit(self, name, indices) -> int:
+    def submit(self, name, indices, version=None) -> int:
         rid = self._next_rid
         self._next_rid += 1
         try:
-            self._pending[rid] = self.service.submit(name, indices)
+            self._pending[rid] = self.service.submit(name, indices, version=version)
         except Exception as e:  # noqa: BLE001 — deferred, mirrors the wire
             self._deferred[rid] = e
         return rid
@@ -566,10 +568,16 @@ class SocketTransport:
         r = self._request(OP_SHAPE, Writer().str(name).bytes())
         return tuple(r.u64() for _ in range(r.u8()))
 
-    def submit(self, name, indices) -> int:
+    def submit(self, name, indices, version=None) -> int:
         rid = self._next_rid
         self._next_rid += 1
-        body = Writer().str(name).array(np.asarray(indices)).bytes()
+        body = (
+            Writer()
+            .str(name)
+            .i64(-1 if version is None else int(version))
+            .array(np.asarray(indices))
+            .bytes()
+        )
         self._send(OP_SUBMIT, rid, body)
         self._pending.append(rid)
         return rid

@@ -97,8 +97,11 @@ def _handle(state: WorkerState, op: int, rid: int, r: Reader) -> bytes | None:
         return w.bytes()
     if op == OP_SUBMIT:
         name = r.str()
+        version = r.i64()  # -1 encodes version=None (single-tensor payloads)
         try:
-            state.pending[rid] = svc.submit(name, r.array())
+            state.pending[rid] = svc.submit(
+                name, r.array(), version=None if version < 0 else version
+            )
         except Exception as e:  # noqa: BLE001 — deferred to flush, per protocol
             state.deferred[rid] = f"{type(e).__name__}: {e}"
         return None

@@ -17,6 +17,18 @@ Three load paths:
   T-entry tiles, each decoded once and reused across overlapping queries
   (hit/miss counters per payload, byte-budgeted with everything else).
 
+``load_stream`` also accepts v4 DELTA containers (versioned payloads
+written by ``repro.temporal.VersionedStore``): queries take a
+``version=`` argument (default: latest), the service resolves the
+keyframe→delta chain from the file's version index, and every answer is
+the float64 sum of the chain components' decodes — the same convention
+as ``repro.temporal.ChainEncoded``, so eager and lazy reads agree
+bit-for-bit.  Per-version component payloads live in the LRU as
+``("venc", name, v)`` entries; decode tiles are keyed by COMPOSITE tile
+id ``version * n_tiles + tile``, so a keyframe's tiles are shared by
+every version that chains through it instead of being re-decoded per
+version.
+
 ``cache_bytes`` is one LRU byte budget over all droppable decode state:
 materialized lazy payload bodies, SZ-lite dense reconstructions (via the
 ``Encoded.cache_nbytes``/``drop_caches`` hooks), and decode tiles.
@@ -52,6 +64,7 @@ import numpy as np
 from repro import codecs
 from repro.codecs import container
 from repro.codecs.indexing import flat_to_multi, multi_to_flat, validate_indices
+from repro.temporal.delta import resolve_chain
 
 
 @dataclasses.dataclass
@@ -63,6 +76,8 @@ class PayloadInfo:
     decode_calls: int = 0
     cache_hits: int = 0
     cache_misses: int = 0
+    #: number of versions for a v4 delta payload; None = single tensor
+    n_versions: int | None = None
 
 
 @dataclasses.dataclass
@@ -175,6 +190,14 @@ class _StreamPayload:
     body_nbytes: int
     enc: codecs.Encoded | None = None
     ownership: Ownership | None = None
+    #: v4 version index; None = plain single-tensor payload
+    versions: list[container.VersionEntry] | None = None
+    #: per-version component payloads (versioned payloads only), each an
+    #: evictable ("venc", name, v) LRU entry
+    vencs: dict[int, codecs.Encoded] = dataclasses.field(default_factory=dict)
+    #: geometry learned from the first materialized component
+    shape: tuple[int, ...] | None = None
+    n_tiles: int | None = None
     #: in-flight background warm (prefetch): joined by _get before use
     warm: concurrent.futures.Future | None = None
     #: True after a background warm materialized the body: the NEXT counted
@@ -211,7 +234,7 @@ class CodecService:
         )
         self._enc_counters_seen: dict[str, tuple[int, int]] = {}
         self.cache_stats = CacheStats()
-        self._queue: list[tuple[int, str, np.ndarray]] = []
+        self._queue: list[tuple[int, str, np.ndarray, int | None]] = []
         self._next_ticket = 0
         #: tickets whose payload group raised during the LAST flush,
         #: ticket -> error (reset at the start of each flush)
@@ -232,11 +255,14 @@ class CodecService:
     def load_stream(
         self, name: str, path: str, *, tile_entries: int | None = None
     ) -> PayloadInfo:
-        """Register a container-v3 file lazily: mmap it, parse only the
-        header and chunk index.  The payload body is materialized at first
-        decode and is evictable under ``cache_bytes`` thereafter.  With
-        ``tile_entries``, queries go through the decode-tile cache."""
-        codec_name, chunks, view = container.open_chunks(path)
+        """Register a container v3/v4 file lazily: mmap it, parse only the
+        header and footer.  Payload bodies are materialized at first
+        decode and are evictable under ``cache_bytes`` thereafter.  With
+        ``tile_entries``, queries go through the decode-tile cache.  v4
+        delta files register as VERSIONED payloads, queried with
+        ``decode_at(..., version=)``."""
+        oc = container.open_container(path)
+        codec_name, chunks, view = oc.codec, oc.chunks, oc.view
         try:  # reject unknown codec ids at LOAD time, exactly like load()
             codecs.get_codec(codec_name)
         except KeyError:
@@ -249,12 +275,16 @@ class CodecService:
         self._payloads.pop(name, None)
         body_nbytes = sum(c.length for c in chunks)
         sp = _StreamPayload(
-            path, codec_name, chunks, view, tile_entries, body_nbytes
+            path, codec_name, chunks, view, tile_entries, body_nbytes,
+            versions=oc.versions,
         )
         self._streams[name] = sp
-        self._info[name] = PayloadInfo(codec_name, body_nbytes)
+        self._info[name] = PayloadInfo(
+            codec_name, body_nbytes,
+            n_versions=len(oc.versions) if oc.versions is not None else None,
+        )
         pool = self._pool()
-        if pool is not None:
+        if pool is not None and sp.versions is None:
             # warm the payload ahead of the query stream: chunk page-in,
             # CRC, and body parse run on the background thread while the
             # caller keeps loading/serving other payloads.  _get joins the
@@ -284,6 +314,9 @@ class CodecService:
         on the chunk-0 primary owner — an instance that keeps the body);
         the materialized body joins the LRU ledger just like a decode's
         would, so it stays accounted and evictable."""
+        sp = self._streams.get(name)
+        if sp is not None and sp.versions is not None:
+            return self._ensure_version_geometry(name, sp)
         enc = self._get(name, count=False)
         self._account_decode_state(name, enc)
         return tuple(int(s) for s in enc.shape)
@@ -299,6 +332,11 @@ class CodecService:
         if sp is None:
             raise KeyError(
                 f"no payload {name!r}; loaded: {', '.join(self.payloads())}"
+            )
+        if sp.versions is not None:
+            raise ValueError(
+                f"payload {name!r} is versioned; query it through "
+                "decode_at/submit (version=) instead"
             )
         if sp.enc is None and sp.warm is not None:
             warm, sp.warm = sp.warm, None
@@ -349,6 +387,161 @@ class CodecService:
         self._materialize(name, sp, pipelined=False)
         sp.warm_credit = True
 
+    # -------------------------------------------------------------- versions
+    def _resolve_version(self, name: str, sp: _StreamPayload,
+                         version: int | None) -> int:
+        n = len(sp.versions)
+        v = n - 1 if version is None else int(version)
+        if not 0 <= v < n:
+            raise ValueError(f"{name}: version {v} out of range [0, {n})")
+        return v
+
+    def _set_geometry(self, name: str, sp: _StreamPayload,
+                      enc: codecs.Encoded) -> None:
+        shape = tuple(int(s) for s in enc.shape)
+        if sp.shape is None:
+            sp.shape = shape
+            if sp.tile_entries:
+                sp.n_tiles = -(-int(np.prod(shape)) // sp.tile_entries)
+        elif shape != sp.shape:
+            raise ValueError(
+                f"{name}: version component shape {shape} != {sp.shape}"
+            )
+
+    def _ensure_version_geometry(
+        self, name: str, sp: _StreamPayload
+    ) -> tuple[int, ...]:
+        """Shape (and tile grid) of a versioned payload, learned from its
+        version-0 component — materialized and LRU-accounted on demand."""
+        if sp.shape is None:
+            enc = self._get_component(name, sp, 0, count=False)
+            self._account_version_state(name, sp, 0, enc)
+        return sp.shape
+
+    def _get_component(
+        self, name: str, sp: _StreamPayload, v: int, count: bool = True
+    ) -> codecs.Encoded:
+        """Resolve ONE version's component payload (keyframe or delta),
+        materializing it from the version's chunk range on a miss — the
+        versioned analogue of ``_get``, with the same counting rules."""
+        enc = sp.vencs.get(v)
+        if enc is None:
+            if sp.ownership is not None and not sp.ownership.owns_payload():
+                raise NotOwnedError(
+                    f"payload {name!r} is not owned by this instance "
+                    "(ownership filter excludes every chunk)"
+                )
+            self.cache_stats.miss(name)
+            self._info[name].cache_misses += 1
+            ve = sp.versions[v]
+            body = b"".join(
+                container.read_chunk(sp.view, c)
+                for c in sp.chunks[ve.chunk_start : ve.chunk_stop]
+            )
+            enc = codecs.get_codec(sp.codec).encoded_cls.from_bytes(body)
+            sp.vencs[v] = enc
+            self._set_geometry(name, sp, enc)
+        elif count:
+            self.cache_stats.hit(name)
+            self._info[name].cache_hits += 1
+        return enc
+
+    def _account_version_state(
+        self, name: str, sp: _StreamPayload, v: int, enc: codecs.Encoded
+    ) -> None:
+        """Post-decode accounting for one version component: its chunk
+        bytes (+ droppable codec state) join the LRU as ("venc", name, v),
+        evictable independently of every other version."""
+        ve = sp.versions[v]
+        vbytes = sum(
+            c.length for c in sp.chunks[ve.chunk_start : ve.chunk_stop]
+        )
+
+        def drop(sp=sp, v=v):
+            dropped = sp.vencs.pop(v, None)
+            if dropped is not None:
+                dropped.drop_caches()
+
+        self._cache_put(
+            ("venc", name, v),
+            _CacheEntry(vbytes + enc.cache_nbytes(), None, drop),
+        )
+
+    def _decode_versioned(
+        self, name: str, sp: _StreamPayload, idx: np.ndarray, version: int
+    ) -> tuple[np.ndarray, int]:
+        """Answer a query against version ``version``: float64 sum of the
+        keyframe→delta chain's component answers (keyframe first) — the
+        exact :class:`repro.temporal.ChainEncoded` convention, elementwise,
+        so fleet batch-splitting cannot change a single bit."""
+        chain = resolve_chain(sp.versions, version)
+        if sp.tile_entries:
+            return self._decode_versioned_tiled(name, sp, idx, chain, version)
+        out = np.zeros((idx.shape[0],), dtype=np.float64)
+        for v in chain:
+            enc = self._get_component(name, sp, v)
+            out += np.asarray(self._decode_batched(enc, idx), np.float64)
+            self._account_version_state(name, sp, v, enc)
+        calls = len(chain) * -(-idx.shape[0] // self.max_batch)
+        return out, calls
+
+    def _decode_versioned_tiled(
+        self,
+        name: str,
+        sp: _StreamPayload,
+        idx: np.ndarray,
+        chain: list[int],
+        version: int,
+    ) -> tuple[np.ndarray, int]:
+        """Tiled versioned decode.  Tiles cache under COMPOSITE ids
+        ``v * n_tiles + tid`` so a base version's tiles are decoded once
+        and shared by every version chaining through it; ownership is
+        checked on the BASE tile id, keeping all versions of a tile on
+        one owner (that is what makes the warm handoff and the fleet
+        routing version-independent)."""
+        shape = sp.shape
+        t = sp.tile_entries
+        n_entries = int(np.prod(shape))
+        flat = multi_to_flat(idx, shape)
+        if not len(flat):
+            return np.zeros((0,), dtype=np.float64), 0
+        info = self._info[name]
+        tids = flat // t
+        uniq = [int(tid) for tid in np.unique(tids)]
+        out = np.zeros((len(flat),), dtype=np.float64)
+        decoded = 0
+        for v in chain:
+            comp: codecs.Encoded | None = None
+            for tid in uniq:
+                ctid = v * sp.n_tiles + tid
+                entry = self._cache_touch(("tile", name, ctid))
+                if entry is None:
+                    self.cache_stats.miss(name)
+                    info.cache_misses += 1
+                    if comp is None:
+                        comp = self._get_component(name, sp, v, count=False)
+                    start = tid * t
+                    stop = min(start + t, n_entries)
+                    tpos = flat_to_multi(
+                        np.arange(start, stop, dtype=np.int64), shape
+                    )
+                    tile = self._decode_batched(comp, tpos)
+                    decoded += 1
+                    if sp.ownership is None or sp.ownership.owns_tile(tid):
+                        self._cache_put(
+                            ("tile", name, ctid),
+                            _CacheEntry(int(tile.nbytes), tile),
+                        )
+                else:
+                    self.cache_stats.hit(name)
+                    info.cache_hits += 1
+                    tile = entry.value
+                mask = tids == tid
+                out[mask] += np.asarray(tile[flat[mask] - tid * t], np.float64)
+            if comp is not None:
+                self._account_version_state(name, sp, v, comp)
+        return out, decoded
+
     # -------------------------------------------------------------- prefetch
     def _pool(self) -> concurrent.futures.ThreadPoolExecutor | None:
         """Lazy single-worker pool: one background thread keeps the
@@ -396,11 +589,13 @@ class CodecService:
             return 0
         freed = 0
         for key in [k for k in self._cache if k[1] == name]:
-            unowned = (
-                not sp.ownership.owns_tile(key[2])
-                if key[0] == "tile"
-                else not sp.ownership.owns_payload()
-            )
+            if key[0] == "tile":
+                # composite versioned tile ids fold to their base tile: all
+                # versions of a tile share one owner
+                tid = key[2] % sp.n_tiles if sp.versions is not None else key[2]
+                unowned = not sp.ownership.owns_tile(tid)
+            else:
+                unowned = not sp.ownership.owns_payload()
             if unowned:
                 freed += self._cache[key].nbytes
                 self._cache_evict(key)
@@ -418,11 +613,20 @@ class CodecService:
     def admit_tile(self, name: str, tid: int, values: np.ndarray) -> bool:
         """Warm handoff: admit a tile decoded by another instance, subject
         to the ownership filter and the byte budget.  Counts as neither
-        hit nor miss — no query was answered.  Returns True if admitted."""
+        hit nor miss — no query was answered.  Versioned payloads hand
+        tiles off under their COMPOSITE ids (version * n_tiles + tile);
+        ownership is judged on the base tile.  Returns True if admitted."""
         sp = self._streams.get(name)
         if sp is None or not sp.tile_entries:
             raise KeyError(f"no tiled stream payload {name!r}")
-        if sp.ownership is not None and not sp.ownership.owns_tile(int(tid)):
+        tid = int(tid)
+        base_tid = tid
+        if sp.versions is not None:
+            self._ensure_version_geometry(name, sp)
+            v, base_tid = divmod(tid, sp.n_tiles)
+            if not 0 <= v < len(sp.versions):
+                return False
+        if sp.ownership is not None and not sp.ownership.owns_tile(base_tid):
             return False
         values = np.asarray(values)
         self._cache_put(("tile", name, int(tid)),
@@ -579,55 +783,85 @@ class CodecService:
                   indices: np.ndarray) -> np.ndarray:
         return validate_indices(name, tuple(enc.shape), indices)
 
-    def decode_at(self, name: str, indices: np.ndarray) -> np.ndarray:
+    def decode_at(
+        self, name: str, indices: np.ndarray, version: int | None = None
+    ) -> np.ndarray:
         """Chunked decode so arbitrarily large requests stream through
         fixed-size batches.  Indices are validated up front; stats count
-        only work that actually decoded."""
-        enc = self._get(name)
-        idx = self._validate(name, enc, indices)
+        only work that actually decoded.  ``version`` selects a v4
+        payload's version (default: latest); single-tensor payloads
+        reject it."""
         sp = self._streams.get(name)
-        if sp is not None and sp.tile_entries:
-            out, calls = self._decode_tiled(name, sp, enc, idx)
+        if sp is not None and sp.versions is not None:
+            v = self._resolve_version(name, sp, version)
+            shape = self._ensure_version_geometry(name, sp)
+            idx = validate_indices(name, shape, indices)
+            out, calls = self._decode_versioned(name, sp, idx, v)
         else:
-            out = self._decode_batched(enc, idx)
-            # ceil-div: 0 for an empty query, matching the tiled path
-            # (which reports 0 tiles decoded for an empty query)
-            calls = -(-idx.shape[0] // self.max_batch)
+            if version is not None:
+                raise ValueError(
+                    f"payload {name!r} is not versioned (version={version})"
+                )
+            enc = self._get(name)
+            idx = self._validate(name, enc, indices)
+            if sp is not None and sp.tile_entries:
+                out, calls = self._decode_tiled(name, sp, enc, idx)
+            else:
+                out = self._decode_batched(enc, idx)
+                # ceil-div: 0 for an empty query, matching the tiled path
+                # (which reports 0 tiles decoded for an empty query)
+                calls = -(-idx.shape[0] // self.max_batch)
+            self._account_decode_state(name, enc)
         info = self._info[name]
         info.requests += 1
         info.entries_decoded += idx.shape[0]
         info.decode_calls += calls
-        self._account_decode_state(name, enc)
         return out
 
     # --------------------------------------------------------------- batched
-    def submit(self, name: str, indices: np.ndarray) -> int:
+    def submit(
+        self, name: str, indices: np.ndarray, version: int | None = None
+    ) -> int:
         """Queue a request; returns a ticket resolved by the next flush().
 
         Validates eagerly — a malformed request raises HERE and never
-        enters the queue, so it cannot sink the coalesced batch."""
-        idx = self._validate(name, self._get(name, count=False), indices)
+        enters the queue, so it cannot sink the coalesced batch.
+        ``version=None`` on a versioned payload resolves to the LATEST
+        version at submit time, so the coalesced group is concrete."""
+        sp = self._streams.get(name)
+        if sp is not None and sp.versions is not None:
+            v = self._resolve_version(name, sp, version)
+            shape = self._ensure_version_geometry(name, sp)
+            idx = validate_indices(name, shape, indices)
+        else:
+            if version is not None:
+                raise ValueError(
+                    f"payload {name!r} is not versioned (version={version})"
+                )
+            idx = self._validate(name, self._get(name, count=False), indices)
+            v = None
         ticket = self._next_ticket
         self._next_ticket += 1
-        self._queue.append((ticket, name, idx))
+        self._queue.append((ticket, name, idx, v))
         return ticket
 
     def flush(self) -> dict[int, np.ndarray]:
-        """Decode all queued requests, one coalesced batch per payload.
+        """Decode all queued requests, one coalesced batch per (payload,
+        version) group.
 
-        A payload group that still fails is isolated: its tickets go to
+        A group that still fails is isolated: its tickets go to
         ``self.failed`` (ticket -> exception, reset each flush) and the
         other groups' results are returned normally."""
         self.failed = {}
-        by_payload: dict[str, list[tuple[int, np.ndarray]]] = {}
-        for ticket, name, idx in self._queue:
-            by_payload.setdefault(name, []).append((ticket, idx))
+        by_group: dict[tuple[str, int | None], list[tuple[int, np.ndarray]]] = {}
+        for ticket, name, idx, version in self._queue:
+            by_group.setdefault((name, version), []).append((ticket, idx))
         self._queue.clear()
         results: dict[int, np.ndarray] = {}
-        for name, reqs in by_payload.items():
+        for (name, version), reqs in by_group.items():
             merged = np.concatenate([idx for _, idx in reqs], axis=0)
             try:
-                values = self.decode_at(name, merged)
+                values = self.decode_at(name, merged, version=version)
             except Exception as e:  # noqa: BLE001 — isolate the bad group
                 for ticket, _ in reqs:
                     self.failed[ticket] = e

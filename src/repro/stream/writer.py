@@ -1,16 +1,28 @@
-"""Chunked container-v3 writer: append payload bytes as fit progresses.
+"""Chunked container writer: append payload bytes as fit progresses.
 
-``ChunkedWriter`` writes the v3 header up front, appends chunks as the
+``ChunkedWriter`` writes the header up front, appends chunks as the
 producer emits them (a finalized TT core, an accumulating fitter's
 partial body, a periodic snapshot), and seals the file with the footer
 chunk index on ``close`` — append-only, no seeking back to patch a
 length field, so a crash leaves a file that is cleanly rejected rather
 than silently half-read.
 
-The concatenated chunks are the codec's ``Encoded.to_bytes()`` body;
-``write_chunked`` is the convenience that splits a finished payload into
-fixed-size chunks, which keeps the serve layer's lazy loader
-(``CodecService.load_stream``) from ever needing one giant read.
+Two modes:
+
+* default (container v3): the concatenated chunks are one codec's
+  ``Encoded.to_bytes()`` body; ``write_chunked`` is the convenience that
+  splits a finished payload into fixed-size chunks, which keeps the serve
+  layer's lazy loader (``CodecService.load_stream``) from ever needing
+  one giant read.
+* ``delta=True`` (container v4): the file holds a SEQUENCE of bodies.
+  ``begin_version(base)`` opens a version (``base=-1`` keyframe, else a
+  residual against version ``base``); subsequent ``append`` calls belong
+  to it; the footer's ``TCDV`` block records the per-version chunk
+  ranges.  ``sync()`` is an opt-in durability point: it ends the open
+  version and writes a footer NOW, leaving a valid readable file while
+  the writer stays open — the next ``append`` truncates that footer and
+  keeps going, so a crash mid-version loses only the unsynced tail.
+  ``repro.temporal.VersionedStore`` builds on this.
 """
 from __future__ import annotations
 
@@ -23,15 +35,61 @@ from repro.codecs.base import Encoded
 
 
 class ChunkedWriter:
-    def __init__(self, path: str, codec_name: str):
+    def __init__(self, path: str, codec_name: str, *, delta: bool = False):
         self.path = path
         self.codec_name = codec_name
+        self.delta = delta
         self._chunks: list[container.ChunkEntry] = []
-        self._f = open(path, "wb")
-        self._offset = self._f.write(container.pack_header(codec_name,
-                                                          container.FLAG_CHUNKED))
+        self._versions: list[container.VersionEntry] | None = [] if delta else None
+        self._open_base: int | None = None
+        self._open_start = 0
+        flags = container.FLAG_CHUNKED | (container.FLAG_DELTA if delta else 0)
+        version = container.DELTA_VERSION if delta else container.VERSION
+        self._f = open(path, "w+b")
+        self._offset = self._f.write(
+            container.pack_header(codec_name, flags, version)
+        )
+        self._sealed = False  # a valid footer currently trails the data
         self._closed = False
 
+    # -- delta versions ----------------------------------------------------
+    def begin_version(self, base: int = -1) -> int:
+        """Open version ``len(versions)``; returns its id.
+
+        ``base=-1`` marks a keyframe; ``base=k`` a residual whose decode
+        adds onto version ``k``'s.  Closes the previously open version
+        (which must have received at least one chunk).
+        """
+        if not self.delta:
+            raise ValueError(f"{self.path}: begin_version needs delta=True")
+        if self._closed:
+            raise ValueError(f"{self.path}: writer already closed")
+        self._end_version()
+        vid = len(self._versions)
+        base = int(base)
+        if vid == 0 and base != -1:
+            raise ValueError(f"{self.path}: version 0 must be a keyframe (base=-1)")
+        if not -1 <= base < vid:
+            raise ValueError(f"{self.path}: bad base {base} for version {vid}")
+        self._open_base = base
+        self._open_start = len(self._chunks)
+        return vid
+
+    def _end_version(self) -> None:
+        if self._open_base is None:
+            return
+        if len(self._chunks) == self._open_start:
+            raise ValueError(
+                f"{self.path}: version {len(self._versions)} has no chunks"
+            )
+        self._versions.append(
+            container.VersionEntry(
+                self._open_base, self._open_start, len(self._chunks)
+            )
+        )
+        self._open_base = None
+
+    # -- chunk appends -----------------------------------------------------
     def append(
         self, chunk: bytes, entry_range: tuple[int, int] | None = None
     ) -> int:
@@ -39,17 +97,22 @@ class ChunkedWriter:
 
         ``entry_range=(start, stop)`` records the flat-entry span this
         chunk ROUTES for (footer ``TCDR`` block) — the partition of the
-        index space the fleet router shards ownership by.  Ranges are
-        all-or-nothing across chunks: the footer drops them unless every
-        chunk has one.
+        index space the fleet router shards ownership by (per version, in
+        delta mode).  Ranges are all-or-nothing across chunks: the footer
+        drops them unless every chunk has one.
         """
         if self._closed:
             raise ValueError(f"{self.path}: writer already closed")
+        if self.delta and self._open_base is None:
+            raise ValueError(
+                f"{self.path}: append outside begin_version in delta mode"
+            )
         if not chunk:
             raise ValueError("empty chunk")
         start, stop = (None, None) if entry_range is None else map(int, entry_range)
         if start is not None and not 0 <= start < stop:
             raise ValueError(f"bad entry_range ({start}, {stop})")
+        self._unseal()
         self._f.write(chunk)
         self._chunks.append(
             container.ChunkEntry(
@@ -60,15 +123,54 @@ class ChunkedWriter:
         self._offset += len(chunk)
         return len(self._chunks) - 1
 
+    def _unseal(self) -> None:
+        """Drop a footer written by an earlier ``sync`` so appends resume
+        at the data end; the next sync/close writes a fresh footer."""
+        if self._sealed:
+            self._f.seek(self._offset)
+            self._f.truncate()
+            self._sealed = False
+
     @property
     def chunks_written(self) -> int:
         return len(self._chunks)
+
+    @property
+    def versions_written(self) -> int:
+        return len(self._versions or ())
+
+    # -- sealing -----------------------------------------------------------
+    def sync(self) -> int:
+        """Write a footer NOW without closing; returns current file bytes.
+
+        Ends the open version first (delta mode).  The file is valid and
+        readable from this moment even if the process dies — appends made
+        after the last ``sync`` are the only thing a crash can lose.
+        """
+        if self._closed:
+            raise ValueError(f"{self.path}: writer already closed")
+        if self.delta:
+            self._end_version()
+            if not self._versions:
+                raise ValueError(f"{self.path}: no versions to sync")
+        if not self._sealed:
+            self._f.write(container.pack_footer(self._chunks, self._versions))
+            self._f.flush()
+            self._sealed = True
+        return self._f.tell()
 
     def close(self) -> int:
         """Seal the file with the footer index; returns total file bytes."""
         if self._closed:
             return self._offset
-        self._f.write(container.pack_footer(self._chunks))
+        if self.delta:
+            self._end_version()
+            if not self._versions:
+                raise ValueError(
+                    f"{self.path}: delta file needs at least one version"
+                )
+        if not self._sealed:
+            self._f.write(container.pack_footer(self._chunks, self._versions))
         self._offset = self._f.tell()
         self._f.close()
         self._closed = True

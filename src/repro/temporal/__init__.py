@@ -1,0 +1,41 @@
+"""Delta-coded versioned tensor payloads (container v4).
+
+Sequences of closely related tensors — training checkpoints over steps,
+daily snapshots, sliding windows — share almost all their structure, so
+paying a full independent fit per version wastes most of the bytes.
+`repro.temporal` borrows the video-codec I-frame/P-frame split: version 0
+is a full payload (keyframe), each subsequent version a cheap residual
+fit against the previous version's decode, with a configurable keyframe
+interval bounding the decode chain depth.
+
+    from repro.temporal import VersionedStore
+
+    with VersionedStore.create("run.tcdc", codec="nttd") as store:
+        for step_tensor in snapshots:
+            store.append(step_tensor)
+
+    reader = VersionedStore.open("run.tcdc")
+    x3 = reader.decode(version=3)   # keyframe + delta decodes, summed
+
+The same files serve lazily through ``CodecService.load_stream`` +
+``decode_at(name, idx, version=v)`` and fan out across a fleet with
+version-aware routing; ``repro.compress.checkpoint_codec`` uses it so
+checkpoint step N+1 compresses against step N.
+"""
+from repro.temporal.delta import (
+    ChainEncoded,
+    DeltaFitter,
+    load_chain,
+    resolve_chain,
+)
+from repro.temporal.drift import drifting_versions
+from repro.temporal.store import VersionedStore
+
+__all__ = [
+    "ChainEncoded",
+    "DeltaFitter",
+    "VersionedStore",
+    "drifting_versions",
+    "load_chain",
+    "resolve_chain",
+]

@@ -1,0 +1,219 @@
+"""`VersionedStore`: write/read delta-coded version sequences (v4 files).
+
+The writer keeps a float64 running reconstruction ``hat`` of the LAST
+written version — exactly the sum every reader computes — so each
+residual is fitted against what a decoder will actually see, not against
+the raw previous tensor.  Residual error therefore cannot compound
+silently: version k's chain fitness is measured against the true input
+and ``rekey_below`` (optional) forces a fresh keyframe whenever a drifty
+sequence degrades a chain below the gate.  Every ``append`` ends with a
+``sync`` so the file on disk is always a valid, readable v4 container —
+the checkpoint durability story.
+
+    with VersionedStore.create("run.tcdc", codec="nttd",
+                               keyframe_interval=8) as store:
+        for x in snapshots:
+            stats = store.append(x)   # {"version", "keyframe", "bytes", ...}
+
+    reader = VersionedStore.open("run.tcdc")
+    x5 = reader.decode(version=5)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.codecs import container
+from repro.codecs.base import Encoded, get_codec
+from repro.stream.writer import ChunkedWriter
+from repro.temporal.delta import ChainEncoded, DeltaFitter, resolve_chain
+
+
+class VersionedStore:
+    """Writer for a v4 delta container.  Use :meth:`create` / :meth:`open`."""
+
+    def __init__(
+        self,
+        path: str,
+        codec: str = "nttd",
+        *,
+        keyframe_interval: int = 8,
+        chunk_bytes: int = 1 << 20,
+        keyframe_opts: dict | None = None,
+        delta_opts: dict | None = None,
+        delta_passes: int = 2,
+        slab_entries: int = 1 << 14,
+        rekey_below: float | None = None,
+    ):
+        if keyframe_interval < 1:
+            raise ValueError(f"keyframe_interval must be >= 1, got {keyframe_interval}")
+        if chunk_bytes <= 0:
+            raise ValueError(f"chunk_bytes must be positive, got {chunk_bytes}")
+        self.path = path
+        self.codec_name = codec
+        self.codec = get_codec(codec)
+        self.keyframe_interval = int(keyframe_interval)
+        self.chunk_bytes = int(chunk_bytes)
+        self.keyframe_opts = dict(keyframe_opts or {})
+        self.delta_opts = dict(delta_opts or {})
+        self.delta_passes = int(delta_passes)
+        self.slab_entries = int(slab_entries)
+        self.rekey_below = rekey_below
+        self._writer = ChunkedWriter(path, codec, delta=True)
+        self._shape: tuple[int, ...] | None = None
+        self._delta: DeltaFitter | None = None
+        self._hat: np.ndarray | None = None  # f64 decode of the last version
+        self._vid = 0
+
+    @classmethod
+    def create(cls, path: str, codec: str = "nttd", **kw) -> "VersionedStore":
+        """Start a new versioned store at ``path`` (constructor alias,
+        mirroring :meth:`open`)."""
+        return cls(path, codec, **kw)
+
+    @staticmethod
+    def open(path: str) -> "VersionedReader":
+        return VersionedReader(path)
+
+    # -- writing -----------------------------------------------------------
+    @property
+    def n_versions(self) -> int:
+        return self._vid
+
+    def append(self, x: np.ndarray) -> dict:
+        """Write tensor ``x`` as the next version; returns append stats."""
+        x32 = np.asarray(x, np.float32)
+        if self._shape is None:
+            self._shape = tuple(x32.shape)
+            self._delta = DeltaFitter(
+                self._shape,
+                self.codec_name,
+                slab_entries=self.slab_entries,
+                passes=self.delta_passes,
+                opts=self.delta_opts,
+            )
+        elif tuple(x32.shape) != self._shape:
+            raise ValueError(
+                f"version {self._vid} shape {tuple(x32.shape)} != {self._shape}"
+            )
+        vid = self._vid
+        keyframe = vid % self.keyframe_interval == 0
+        rekeyed = False
+        if not keyframe:
+            residual = np.asarray(x32, np.float64) - self._hat
+            enc = self._delta.fit_residual(residual.astype(np.float32))
+            hat = self._hat + np.asarray(enc.to_dense(), np.float64)
+            fit = _fitness(x32, hat)
+            if self.rekey_below is not None and fit < self.rekey_below:
+                keyframe = rekeyed = True  # chain degraded: cut a fresh keyframe
+            else:
+                nbytes = self._write_version(enc, base=vid - 1)
+                self._hat = hat
+        if keyframe:
+            enc = self._fit_keyframe(x32)
+            nbytes = self._write_version(enc, base=-1)
+            self._hat = np.asarray(enc.to_dense(), np.float64)
+            fit = _fitness(x32, self._hat)
+        self._writer.sync()  # file on disk is valid after every append
+        self._vid += 1
+        return {
+            "version": vid,
+            "keyframe": keyframe,
+            "rekeyed": rekeyed,
+            "bytes": nbytes,
+            "fitness": fit,
+        }
+
+    def _fit_keyframe(self, x32: np.ndarray) -> Encoded:
+        opts = dict(self.keyframe_opts)
+        budget = opts.pop("budget", None)
+        return self.codec.fit(x32, budget, **opts)
+
+    def _write_version(self, enc: Encoded, base: int) -> int:
+        body = enc.to_bytes()
+        n_entries = int(np.prod(self._shape))
+        n_chunks = -(-len(body) // self.chunk_bytes)
+        self._writer.begin_version(base)
+        for i, off in enumerate(range(0, len(body), self.chunk_bytes)):
+            lo = i * n_entries // n_chunks
+            hi = (i + 1) * n_entries // n_chunks
+            self._writer.append(
+                body[off : off + self.chunk_bytes],
+                entry_range=(lo, hi) if hi > lo else None,
+            )
+        return len(body)
+
+    def close(self) -> int:
+        return self._writer.close()
+
+    def __enter__(self) -> "VersionedStore":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self._writer.__exit__(exc_type, exc, tb)
+
+
+def _fitness(x: np.ndarray, hat: np.ndarray) -> float:
+    x64 = np.asarray(x, np.float64)
+    err = float(np.linalg.norm(x64 - hat))
+    return 1.0 - err / max(float(np.linalg.norm(x64)), 1e-30)
+
+
+class VersionedReader:
+    """Eager in-process reader for a v4 file (the serve layer has its own
+    lazy path through ``CodecService.load_stream``).  Component payloads
+    materialize once and are shared by every chain that includes them."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._oc = container.open_container(path)
+        if not self._oc.is_versioned:
+            self._oc.close()
+            raise ValueError(f"{path}: not a v{container.DELTA_VERSION} delta container")
+        self.codec_name = self._oc.codec
+        self.codec = get_codec(self._oc.codec)
+        self._components: dict[int, Encoded] = {}
+
+    @property
+    def versions(self) -> list[container.VersionEntry]:
+        return list(self._oc.versions)
+
+    @property
+    def n_versions(self) -> int:
+        return len(self._oc.versions)
+
+    def version_bytes(self, version: int) -> int:
+        ve = self._oc.versions[version]
+        return sum(c.length for c in self._oc.chunks[ve.chunk_start : ve.chunk_stop])
+
+    def component(self, version: int) -> Encoded:
+        """The stand-alone decode component version ``version`` contributes
+        (keyframe payload or delta residual), cached after first read."""
+        if version not in self._components:
+            ve = self._oc.versions[version]
+            body = b"".join(
+                container.read_chunk(self._oc.view, c)
+                for c in self._oc.chunks[ve.chunk_start : ve.chunk_stop]
+            )
+            self._components[version] = self.codec.encoded_cls.from_bytes(body)
+        return self._components[version]
+
+    def encoded(self, version: int | None = None) -> ChainEncoded:
+        v = self.n_versions - 1 if version is None else int(version)
+        chain = resolve_chain(self._oc.versions, v)
+        return ChainEncoded([self.component(c) for c in chain])
+
+    def decode(self, version: int | None = None) -> np.ndarray:
+        return self.encoded(version).to_dense()
+
+    def decode_at(self, indices: np.ndarray, version: int | None = None) -> np.ndarray:
+        return self.encoded(version).decode_at(indices)
+
+    def close(self) -> None:
+        self._components.clear()
+        self._oc.close()
+
+    def __enter__(self) -> "VersionedReader":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

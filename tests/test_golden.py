@@ -1,0 +1,74 @@
+"""Backward-compatibility matrix over the checked-in golden containers.
+
+Every on-disk format the loaders have ever produced must keep decoding
+to the values frozen in ``tests/golden/expected.npz`` — through the
+eager path (``codecs.load_bytes``) and, for container formats, the lazy
+serve path (``CodecService.load_stream``).  Regenerate the fixtures only
+via ``scripts/make_golden.py`` (and only to ADD a format).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.codecs import container, load_bytes
+from repro.serve.codec_service import CodecService
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
+_NPZ = np.load(os.path.join(GOLDEN, "expected.npz"))
+IDX = _NPZ["indices"]
+
+
+def _path(name: str) -> str:
+    return os.path.join(GOLDEN, name)
+
+
+def _read(name: str) -> bytes:
+    with open(_path(name), "rb") as f:
+        return f.read()
+
+
+def _check(values, key: str) -> None:
+    np.testing.assert_allclose(
+        np.asarray(values, np.float64), _NPZ[key], rtol=1e-5, atol=1e-6
+    )
+
+
+class TestLoadBytes:
+    def test_v2_legacy_nttd(self):
+        enc = load_bytes(_read("v2_nttd.bin"))
+        _check(enc.decode_at(IDX), "v2_nttd")
+
+    def test_v3_monolithic(self):
+        enc = load_bytes(_read("v3_mono.tcdc"))
+        _check(enc.decode_at(IDX), "v3")
+
+    def test_v3_chunked(self):
+        enc = load_bytes(_read("v3_chunked.tcdc"))
+        _check(enc.decode_at(IDX), "v3")
+
+    def test_v4_delta_latest(self):
+        enc = load_bytes(_read("v4_delta.tcdc"))  # chain of the LATEST version
+        _check(enc.decode_at(IDX), "v4_version2")
+
+
+class TestServeLayer:
+    @pytest.mark.parametrize("name,key", [
+        ("v3_mono.tcdc", "v3"),
+        ("v3_chunked.tcdc", "v3"),
+    ])
+    def test_v3_load_stream(self, name, key):
+        svc = CodecService()
+        svc.load_stream("g", _path(name))
+        _check(svc.decode_at("g", IDX), key)
+
+    def test_v4_load_stream_all_versions(self):
+        svc = CodecService()
+        svc.load_stream("g", _path("v4_delta.tcdc"))
+        assert svc.info("g").n_versions == 3
+        for v in range(3):
+            _check(svc.decode_at("g", IDX, version=v), f"v4_version{v}")
+
+    def test_v2_has_no_lazy_open(self):
+        with pytest.raises(ValueError, match="lazy open"):
+            container.open_container(_path("v2_nttd.bin"))

@@ -1,0 +1,357 @@
+"""repro.temporal: v4 delta containers, VersionedStore round-trips,
+versioned serving (single service and fleet, bit-identical), cache
+accounting across shared base tiles, and the versioned checkpointer."""
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.codecs import container, load_bytes
+from repro.fleet import FleetFrontend, SocketTransport
+from repro.serve.codec_service import CodecService
+from repro.stream.writer import ChunkedWriter
+from repro.temporal import DeltaFitter, VersionedStore, drifting_versions
+
+SHAPE = (12, 10, 8)
+N_VERSIONS = 5
+KF_INTERVAL = 4  # versions 0 and 4 are keyframes, 1-3 are deltas
+
+
+@pytest.fixture(scope="module")
+def store(tmp_path_factory):
+    """(path, input versions, per-append stats) for a shared ttd store."""
+    path = str(tmp_path_factory.mktemp("temporal") / "t.tcdc")
+    data = drifting_versions(SHAPE, N_VERSIONS, drift=0.05, noise=0.02, seed=5)
+    with VersionedStore.create(
+        path, "ttd", keyframe_interval=KF_INTERVAL, chunk_bytes=2048,
+        keyframe_opts={"max_rank": 8}, delta_opts={"max_rank": 2},
+    ) as s:
+        stats = [s.append(x) for x in data]
+    return path, data, stats
+
+
+# ---------------------------------------------------------------- container
+class TestContainerV4:
+    def test_version_index_round_trip(self, store):
+        path, _, _ = store
+        codec, chunks, versions = container.container_index(path)
+        assert codec == "ttd"
+        assert len(versions) == N_VERSIONS
+        assert [v.base for v in versions] == [-1, 0, 1, 2, -1]
+        assert versions[0].chunk_start == 0
+        assert versions[-1].chunk_stop == len(chunks)
+        for prev, cur in zip(versions, versions[1:]):
+            assert cur.chunk_start == prev.chunk_stop
+
+    def test_legacy_apis_reject_v4(self, store):
+        path, _, _ = store
+        with pytest.raises(ValueError, match="open_container"):
+            container.open_chunks(path)
+        with pytest.raises(ValueError, match="container_index"):
+            container.chunk_index(path)
+
+    def test_corrupt_version_count_rejected(self, store):
+        path, _, _ = store
+        with open(path, "rb") as f:
+            data = bytearray(f.read())
+        at = data.rfind(container.VINDEX_MAGIC) + 4
+        data[at : at + 4] = struct.pack("<I", 999)
+        with pytest.raises(ValueError, match="truncated|version"):
+            load_bytes(bytes(data))
+
+    def test_corrupt_version_entry_rejected(self, store):
+        path, _, _ = store
+        with open(path, "rb") as f:
+            data = bytearray(f.read())
+        at = data.rfind(container.VINDEX_MAGIC) + 8
+        data[at : at + 16] = struct.pack("<qII", 0, 0, 1)  # v0 not a keyframe
+        with pytest.raises(ValueError, match="version"):
+            load_bytes(bytes(data))
+
+    def test_load_bytes_returns_latest_chain(self, store):
+        path, data, _ = store
+        with open(path, "rb") as f:
+            enc = load_bytes(f.read())
+        with VersionedStore.open(path) as reader:
+            np.testing.assert_array_equal(enc.to_dense(), reader.decode())
+
+    def test_writer_version_discipline(self, tmp_path):
+        path = str(tmp_path / "w.tcdc")
+        w = ChunkedWriter(path, "ttd", delta=True)
+        with pytest.raises(ValueError, match="outside begin_version"):
+            w.append(b"x")
+        with pytest.raises(ValueError, match="keyframe"):
+            w.begin_version(0)  # version 0 must be a keyframe
+        w.begin_version(-1)
+        with pytest.raises(ValueError, match="no chunks"):
+            w.sync()  # open version is empty
+        w.append(b"body")
+        with pytest.raises(ValueError, match="bad base"):
+            w.begin_version(1)  # forward reference
+        w.close()
+        _, _, versions = container.container_index(path)
+        assert len(versions) == 1 and versions[0].is_keyframe
+
+    def test_sync_leaves_readable_file(self, tmp_path):
+        path = str(tmp_path / "s.tcdc")
+        w = ChunkedWriter(path, "ttd", delta=True)
+        w.begin_version(-1)
+        w.append(b"aaaa")
+        w.sync()
+        _, chunks, versions = container.container_index(path)
+        assert (len(chunks), len(versions)) == (1, 1)
+        w.begin_version(0)
+        w.append(b"bbbb")  # truncates the synced footer, keeps appending
+        w.close()
+        _, chunks, versions = container.container_index(path)
+        assert (len(chunks), len(versions)) == (2, 2)
+
+
+# ---------------------------------------------------------------- store
+class TestVersionedStore:
+    def test_round_trip_fitness(self, store):
+        path, data, stats = store
+        with VersionedStore.open(path) as reader:
+            assert reader.n_versions == N_VERSIONS
+            for v, x in enumerate(data):
+                hat = reader.decode(version=v)
+                x64 = np.asarray(x, np.float64)
+                fit = 1 - np.linalg.norm(x64 - hat) / np.linalg.norm(x64)
+                assert fit == pytest.approx(stats[v]["fitness"], abs=1e-6)
+                assert fit > 0.9
+            np.testing.assert_array_equal(reader.decode(), reader.decode(version=4))
+
+    def test_deltas_much_smaller_than_keyframes(self, store):
+        _, _, stats = store
+        kf = [s["bytes"] for s in stats if s["keyframe"]]
+        deltas = [s["bytes"] for s in stats if not s["keyframe"]]
+        assert len(kf) == 2 and len(deltas) == 3
+        assert max(deltas) * 3 < min(kf)
+
+    def test_rekey_below_forces_keyframe(self, tmp_path):
+        data = drifting_versions((10, 8, 6), 3, drift=0.3, noise=0.1, seed=9)
+        with VersionedStore.create(
+            str(tmp_path / "r.tcdc"), "ttd", keyframe_interval=100,
+            keyframe_opts={"max_rank": 6}, delta_opts={"max_rank": 1},
+            rekey_below=0.999,
+        ) as s:
+            stats = [s.append(x) for x in data]
+        # a rank-1 residual cannot hold the chain above .999 -> rekeyed
+        assert any(st["rekeyed"] for st in stats[1:])
+        for st in stats:
+            assert st["rekeyed"] == (st["keyframe"] and st["version"] > 0)
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        with VersionedStore.create(
+            str(tmp_path / "m.tcdc"), "ttd", keyframe_opts={"max_rank": 2}
+        ) as s:
+            s.append(np.zeros((4, 4, 4), np.float32) + 1)
+            with pytest.raises(ValueError, match="shape"):
+                s.append(np.ones((4, 4, 5), np.float32))
+
+
+# ---------------------------------------------------------------- service
+def _probe(n=256, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.stack([rng.integers(0, s, n) for s in SHAPE], axis=1)
+
+
+class TestServiceVersioned:
+    def test_decode_at_matches_reader(self, store):
+        path, _, _ = store
+        idx = _probe()
+        with VersionedStore.open(path) as reader:
+            for tile_entries in (None, 64):
+                svc = CodecService()
+                svc.load_stream("t", path, tile_entries=tile_entries)
+                assert svc.info("t").n_versions == N_VERSIONS
+                for v in (0, 2, 4, None):
+                    np.testing.assert_array_equal(
+                        svc.decode_at("t", idx, version=v),
+                        reader.decode_at(idx, version=v),
+                    )
+
+    def test_version_validation(self, store):
+        path, _, _ = store
+        svc = CodecService()
+        svc.load_stream("t", path)
+        with pytest.raises(ValueError, match="out of range"):
+            svc.decode_at("t", _probe(), version=N_VERSIONS)
+        from repro.codecs import get_codec
+
+        rng = np.random.default_rng(0)
+        flat = get_codec("ttd").fit(rng.random((4, 4, 4)).astype(np.float32),
+                                    max_rank=2)
+        svc.load("flat", flat)
+        with pytest.raises(ValueError, match="not versioned"):
+            svc.decode_at("flat", np.zeros((1, 3), np.int64), version=0)
+
+    def test_submit_flush_mixed_versions(self, store):
+        path, _, _ = store
+        svc = CodecService()
+        svc.load_stream("t", path, tile_entries=64)
+        idx = _probe()
+        tickets = {v: svc.submit("t", idx, version=v) for v in (0, 1, None)}
+        out = svc.flush()
+        for v, t in tickets.items():
+            np.testing.assert_array_equal(out[t], svc.decode_at("t", idx, version=v))
+
+    def test_keyframe_tiles_shared_across_versions(self, store):
+        path, _, _ = store
+        svc = CodecService()
+        svc.load_stream("t", path, tile_entries=64)
+        idx = _probe()
+        svc.decode_at("t", idx, version=1)  # cold: keyframe 0 + delta 1 tiles
+        h0, m0 = svc.cache_stats.hits, svc.cache_stats.misses
+        svc.decode_at("t", idx, version=2)  # shares v0 AND v1 tiles, adds v2
+        h1, m1 = svc.cache_stats.hits, svc.cache_stats.misses
+        assert h1 - h0 > 0  # base-chain tiles hit
+        assert m1 - m0 > 0  # only version 2's own tiles missed
+        svc.decode_at("t", idx, version=2)  # fully warm
+        h2, m2 = svc.cache_stats.hits, svc.cache_stats.misses
+        assert m2 == m1 and h2 > h1
+
+    def test_cache_budget_bounds_versioned_state(self, store):
+        path, _, _ = store
+        budget = 16 << 10
+        svc = CodecService(cache_bytes=budget)
+        svc.load_stream("t", path, tile_entries=64)
+        idx = _probe()
+        for v in range(N_VERSIONS):
+            svc.decode_at("t", idx, version=v)
+            assert svc.cache_stats.resident_bytes <= budget
+        assert svc.cache_stats.evictions > 0
+
+
+# ---------------------------------------------------------------- fleet
+class TestFleetVersioned:
+    @pytest.mark.parametrize("tile_entries", [None, 64])
+    def test_three_instances_bit_identical(self, store, tile_entries):
+        path, _, _ = store
+        single = CodecService()
+        single.load_stream("t", path, tile_entries=tile_entries)
+        fleet = FleetFrontend(3)
+        fleet.load_stream("t", path, tile_entries=tile_entries)
+        idx = _probe(512, seed=3)
+        for v in (0, 1, 2, 3, 4, None):
+            np.testing.assert_array_equal(
+                fleet.decode_at("t", idx, version=v),
+                single.decode_at("t", idx, version=v),
+            )
+        fleet.close()
+
+    def test_socket_workers_bit_identical(self, store):
+        path, _, _ = store
+        single = CodecService()
+        single.load_stream("t", path, tile_entries=64)
+        fleet = FleetFrontend(
+            ["w0", "w1"], transport_factory=lambda iid: SocketTransport.spawn(iid)
+        )
+        try:
+            fleet.load_stream("t", path, tile_entries=64)
+            idx = _probe(512, seed=4)
+            for v in (0, 3, None):
+                np.testing.assert_array_equal(
+                    fleet.decode_at("t", idx, version=v),
+                    single.decode_at("t", idx, version=v),
+                )
+        finally:
+            fleet.close()
+
+
+# ---------------------------------------------------------------- nttd delta
+def test_nttd_warm_started_delta(tmp_path):
+    """The paper codec's stream fitter resumes across residuals: the chain
+    stays near (here: above) the keyframe's own fitness at a fraction of
+    the keyframe bytes."""
+    data = drifting_versions((8, 6, 5), 2, drift=0.05, noise=0.02, seed=2)
+    with VersionedStore.create(
+        str(tmp_path / "n.tcdc"), "nttd", keyframe_interval=4,
+        keyframe_opts=dict(rank=4, hidden=8, epochs=20, batch_size=512,
+                           eval_batch=512, init_reorder=False,
+                           update_reorder=False, seed=0),
+        delta_opts=dict(rank=2, hidden=4, d_prime=2, lr=1e-2,
+                        batch_size=256, steps_per_slab=100, seed=0),
+    ) as s:
+        stats = [s.append(x) for x in data]
+    assert not stats[1]["keyframe"]
+    assert stats[1]["bytes"] < stats[0]["bytes"]
+    assert stats[1]["fitness"] >= stats[0]["fitness"] - 0.05
+    with VersionedStore.open(str(tmp_path / "n.tcdc")) as reader:
+        assert reader.decode(version=1).shape == (8, 6, 5)
+
+
+def test_delta_fitter_persists_across_residuals():
+    fitter = DeltaFitter((8, 6, 5), "nttd", passes=1,
+                         opts=dict(rank=2, hidden=4, batch_size=256, seed=0))
+    rng = np.random.default_rng(0)
+    r = rng.standard_normal((8, 6, 5)).astype(np.float32) * 0.1
+    fitter.fit_residual(r)
+    inner = fitter._fitter
+    fitter.fit_residual(r * 0.5)
+    assert fitter._fitter is inner  # warm start: same fitter object resumes
+
+
+# ---------------------------------------------------------------- checkpoint
+class TestVersionedCheckpointer:
+    def _trees(self, n=3):
+        rng = np.random.default_rng(7)
+        mats = drifting_versions((16, 12, 10), n, drift=0.05, noise=0.02, seed=3)
+        bias = rng.standard_normal(8).astype(np.float32)
+        return [{"w": m, "b": bias + k} for k, m in enumerate(mats)]
+
+    def _cfg(self, **kw):
+        from repro.compress.checkpoint_codec import VersionedCheckpointConfig
+
+        base = dict(codec="ttd", min_elements=256, min_fitness=0.9,
+                    keyframe_interval=4, keyframe_opts={"max_rank": 8},
+                    delta_opts={"max_rank": 2})
+        base.update(kw)
+        return VersionedCheckpointConfig(**base)
+
+    def test_save_restore_steps(self, tmp_path):
+        from repro.compress.checkpoint_codec import VersionedCheckpointer
+
+        trees = self._trees()
+        with VersionedCheckpointer(str(tmp_path / "ck"), self._cfg()) as ck:
+            stats = [ck.save_step(t) for t in trees]
+            r1 = ck.restore_step(1, trees[0])
+        assert [s["leaves_store"] for s in stats] == [1, 1, 1]
+        assert stats[1]["bytes"] < stats[0]["bytes"] / 2  # delta step
+        np.testing.assert_array_equal(r1["b"], trees[1]["b"])  # raw: exact
+        w64 = np.asarray(trees[1]["w"], np.float64)
+        fit = 1 - np.linalg.norm(w64 - r1["w"]) / np.linalg.norm(w64)
+        assert fit > 0.9
+
+    def test_reopen_is_restore_only(self, tmp_path):
+        from repro.compress.checkpoint_codec import VersionedCheckpointer
+
+        trees = self._trees(2)
+        path = str(tmp_path / "ck")
+        with VersionedCheckpointer(path, self._cfg()) as ck:
+            for t in trees:
+                ck.save_step(t)
+        ck2 = VersionedCheckpointer(path, self._cfg())
+        assert ck2.n_steps == 2
+        r0 = ck2.restore_step(0, trees[0])
+        np.testing.assert_array_equal(r0["b"], trees[0]["b"])
+        with pytest.raises(ValueError, match="restore-only"):
+            ck2.save_step(trees[0])
+
+    def test_unfit_leaf_demoted_to_raw(self, tmp_path):
+        from repro.compress.checkpoint_codec import VersionedCheckpointer
+
+        # rank-1 TT cannot reach .99 on random data -> permanent demotion
+        cfg = self._cfg(min_fitness=0.99, keyframe_opts={"max_rank": 1})
+        rng = np.random.default_rng(1)
+        trees = [{"w": rng.standard_normal((24, 20)).astype(np.float32)}
+                 for _ in range(2)]
+        with VersionedCheckpointer(str(tmp_path / "ck"), cfg) as ck:
+            s0 = ck.save_step(trees[0])
+            s1 = ck.save_step(trees[1])
+            r1 = ck.restore_step(1, trees[0])
+        assert s0["leaves_store"] == 0 and s0["leaves_raw"] == 1
+        assert s1["leaves_raw"] == 1
+        assert not os.path.exists(str(tmp_path / "ck" / "leaf0.tcdc"))
+        np.testing.assert_array_equal(r1["w"], trees[1]["w"])  # raw: exact
