@@ -20,6 +20,10 @@ fails CI when a headline metric regresses more than ``--tolerance``
                               the versioned-payload benchmark: independent
                               bytes-per-version over delta-chain bytes, and
                               the chain's reconstruction fitness)
+- ``obs.traced_overhead_pct`` (BENCH_obs.json, the tracing-overhead cell —
+                              gated against an ABSOLUTE 10%% ceiling, not the
+                              baseline: the honest value hovers near zero, so
+                              a relative tolerance would gate noise)
 
 Metrics whose BENCH file is absent are skipped unless named in
 ``--require`` (CI's tier1 job requires stream+fleet+kernels, the
@@ -54,9 +58,12 @@ def _fused_cold_prefetch(runs):
     ]
 
 
-#: group -> (bench file, {metric: (extractor over runs, higher_is_better)})
-#: an extractor raising ValueError/KeyError means "rows absent in this
-#: BENCH file" (older format) — the metric is skipped, not failed
+#: group -> (bench file, {metric: (extractor over runs, higher_is_better)
+#: or (extractor, higher_is_better, absolute_bound)}).  A 3-tuple gates
+#: against the fixed bound instead of the baseline (ceiling when lower is
+#: better, floor when higher is).  An extractor raising ValueError/KeyError
+#: means "rows absent in this BENCH file" (older format) — the metric is
+#: skipped, not failed
 GROUPS = {
     "stream": (
         "BENCH_stream.json",
@@ -113,6 +120,16 @@ GROUPS = {
             ),
         },
     ),
+    "obs": (
+        "BENCH_obs.json",
+        {
+            "traced_overhead_pct": (
+                lambda runs: max(r["traced_overhead_pct"] for r in runs),
+                False,
+                10.0,
+            ),
+        },
+    ),
     "kernels": (
         "BENCH_kernels.json",
         {
@@ -136,9 +153,9 @@ def current_metrics() -> dict[str, dict[str, float]]:
         with open(path) as f:
             runs = json.load(f)["runs"]
         vals: dict[str, float] = {}
-        for name, (extract, _) in metrics.items():
+        for name, spec in metrics.items():
             try:
-                vals[name] = round(float(extract(runs)), 4)
+                vals[name] = round(float(spec[0](runs)), 4)
             except (ValueError, KeyError):  # rows absent (older BENCH file)
                 continue
         out[group] = vals
@@ -196,11 +213,22 @@ def main(argv: list[str] | None = None) -> int:
     for group, metrics in sorted(current.items()):
         base_group = baseline.get(group, {})
         for name, value in sorted(metrics.items()):
+            spec = GROUPS[group][1][name]
+            higher_better = spec[1]
+            if len(spec) > 2:  # fixed absolute bound, baseline-independent
+                limit = spec[2]
+                ok = value >= limit if higher_better else value <= limit
+                bound = f"{'>=' if higher_better else '<='} {limit:.1f} absolute"
+                checked += 1
+                status = "ok" if ok else "OVER BUDGET"
+                print(f"  {group}.{name:<16} = {value:>12.1f}  ({bound}) {status}")
+                if not ok:
+                    failures.append(f"{group}.{name}")
+                continue
             base = base_group.get(name)
             if base is None:
                 print(f"  {group}.{name:<16} = {value:>12.1f}  (no baseline, skipped)")
                 continue
-            _, higher_better = GROUPS[group][1][name]
             if higher_better:
                 floor = base * (1 - args.tolerance)
                 ok = value >= floor
@@ -222,11 +250,12 @@ def main(argv: list[str] | None = None) -> int:
         return 1
     if failures:
         print(
-            f"check_bench: {len(failures)} metric(s) regressed more than "
-            f"{args.tolerance:.0%}: {', '.join(failures)}"
+            f"check_bench: {len(failures)} metric(s) out of bounds "
+            f"(regressed > {args.tolerance:.0%} or over an absolute budget): "
+            f"{', '.join(failures)}"
         )
         return 1
-    print(f"check_bench: {checked} metric(s) within {args.tolerance:.0%} of baseline")
+    print(f"check_bench: {checked} metric(s) within bounds")
     return 0
 
 

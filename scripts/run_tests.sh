@@ -11,6 +11,7 @@
 #     scripts/run_tests.sh fleet-procs-smoke  # 3 OS-process workers (sockets)
 #     scripts/run_tests.sh kernels          # kernel tests + fused-decode roofline
 #     scripts/run_tests.sh temporal         # versioned payloads + fig10 smoke
+#     scripts/run_tests.sh obs              # tracing/metrics suite + traced fleet smoke
 #     scripts/run_tests.sh bench-gate       # BENCH_*.json vs committed baseline
 #     scripts/run_tests.sh -m 'not slow'    # pytest passthrough (custom select)
 #
@@ -106,6 +107,21 @@ phase_temporal() {
     echo "temporal OK: $(tr -d '\n' < benchmarks/results/BENCH_fig10.json | head -c 200)"
 }
 
+phase_obs() {
+    # Observability: the repro.obs suite (ring recorder, metrics, export,
+    # report CLI, cross-process stitching) plus the traced 3-instance fleet
+    # smoke — answers must be bit-identical traced vs untraced and the
+    # tracing overhead must hold the <=10% budget (obs.traced_overhead_pct
+    # in the bench gate).  results/obs_trace.json is the CI trace artifact
+    # (Chrome trace-event format, loadable in Perfetto).
+    python -m pytest -x -q tests/test_obs.py
+    python -m benchmarks.obs_bench --smoke
+    test -s benchmarks/results/obs_trace.json
+    test -s benchmarks/results/BENCH_obs.json
+    python -m repro.obs.report benchmarks/results/obs_trace.json
+    echo "obs OK: $(tr -d '\n' < benchmarks/results/BENCH_obs.json | head -c 200)"
+}
+
 phase_bench_gate() {
     # Fail on >30% regression of the headline BENCH metrics vs the
     # committed baseline (scripts/check_bench.py --update reseeds it).
@@ -121,6 +137,7 @@ case "${1:-all}" in
     fleet-procs-smoke) phase_fleet_procs_smoke ;;
     kernels)           phase_kernels ;;
     temporal)          phase_temporal ;;
+    obs)               phase_obs ;;
     bench-gate)        phase_bench_gate ;;
     all)
         phase_registry
@@ -131,6 +148,7 @@ case "${1:-all}" in
         phase_fleet_procs_smoke
         phase_kernels
         phase_temporal
+        phase_obs
         phase_bench_gate
         ;;
     *)

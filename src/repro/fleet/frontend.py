@@ -45,12 +45,12 @@ real (ring change + retirement).
 """
 from __future__ import annotations
 
-import collections
 import time
 from typing import Callable
 
 import numpy as np
 
+from repro import obs
 from repro.codecs import container
 from repro.codecs.indexing import validate_indices
 from repro.fleet.router import HashRing, PayloadRoute
@@ -125,13 +125,27 @@ class FleetFrontend:
         self.excluded: set[str] = set()
         #: instance -> the TransportError that excluded it
         self.exclusion_errors: dict[str, TransportError] = {}
-        self._latency: dict[str, collections.deque] = {
-            iid: collections.deque(maxlen=latency_window) for iid in self.transports
-        }
-        #: monotonic per-instance flush counter (the latency deque is
-        #: window-capped, so len() is not a flush count)
-        self._flush_counts: dict[str, int] = {iid: 0 for iid in self.transports}
-        self._peak_inflight: dict[str, int] = {iid: 0 for iid in self.transports}
+        #: per-instance flush-latency histograms + peak-inflight gauges
+        #: (all-time buckets AND an exact recent window, bounded memory)
+        self.metrics = obs.MetricsRegistry()
+        self._lat_hist: dict[str, obs.Histogram] = {}
+        self._peak_gauge: dict[str, obs.Gauge] = {}
+        for iid in self.transports:
+            self._add_instance_instruments(iid)
+
+    def _add_instance_instruments(self, iid: str) -> None:
+        self._lat_hist[iid] = self.metrics.histogram(
+            "flush_latency_seconds", window=self._latency_window, instance=iid
+        )
+        self._peak_gauge[iid] = self.metrics.gauge(
+            "peak_inflight_bytes", instance=iid
+        )
+
+    def _remove_instance_instruments(self, iid: str) -> None:
+        self._lat_hist.pop(iid, None)
+        self._peak_gauge.pop(iid, None)
+        self.metrics.remove("flush_latency_seconds", instance=iid)
+        self.metrics.remove("peak_inflight_bytes", instance=iid)
 
     # ------------------------------------------------------------------ admin
     @property
@@ -181,9 +195,7 @@ class FleetFrontend:
                 pass
             raise
         self.transports[iid] = t
-        self._latency[iid] = collections.deque(maxlen=self._latency_window)
-        self._flush_counts[iid] = 0
-        self._peak_inflight[iid] = 0
+        self._add_instance_instruments(iid)
         return t
 
     def retire_instance(self, iid: str) -> Transport:
@@ -192,9 +204,7 @@ class FleetFrontend:
         in-flight work drained — the rebalancer sequences this.  A dead
         transport retires without a hang: the shutdown is best-effort."""
         t = self.transports.pop(iid)
-        self._latency.pop(iid, None)
-        self._flush_counts.pop(iid, None)
-        self._peak_inflight.pop(iid, None)
+        self._remove_instance_instruments(iid)
         self.excluded.discard(iid)
         self.exclusion_errors.pop(iid, None)
         try:
@@ -218,13 +228,18 @@ class FleetFrontend:
     def latency_seconds(self, iid: str) -> list[float]:
         """Wall seconds of this instance's most recent flushes (window-
         capped at ``latency_window``; see ``flush_count`` for the total)."""
-        return list(self._latency[iid])
+        return self._lat_hist[iid].window_values()
+
+    def latency_histogram(self, iid: str) -> obs.Histogram:
+        """The full flush-latency instrument: all-time bucket counts plus
+        the exact recent window ``latency_seconds`` reads."""
+        return self._lat_hist[iid]
 
     def flush_count(self, iid: str) -> int:
-        return self._flush_counts[iid]
+        return self._lat_hist[iid].count
 
     def peak_inflight_bytes(self, iid: str) -> int:
-        return self._peak_inflight[iid]
+        return int(self._peak_gauge[iid].value)
 
     # ------------------------------------------------------------------ load
     def load_stream(
@@ -342,12 +357,13 @@ class FleetFrontend:
     ) -> int:
         """Queue a request; resolved by the next flush().  Validates
         eagerly so a malformed request can never poison a batch."""
-        idx = self._validate(name, indices)
-        v = self._resolve_version(name, version)
-        ticket = self._next_ticket
-        self._next_ticket += 1
-        self._queue.append((ticket, name, idx, v))
-        return ticket
+        with obs.span("fleet.submit", payload=name):
+            idx = self._validate(name, indices)
+            v = self._resolve_version(name, version)
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._queue.append((ticket, name, idx, v))
+            return ticket
 
     def decode_at(
         self, name: str, indices: np.ndarray, version: int | None = None
@@ -356,15 +372,18 @@ class FleetFrontend:
         Any other queued tickets are resolved too — their results are
         held for the next flush(), and their failures (if any) stay in
         ``self.failed`` until then, mirroring CodecService semantics."""
-        ticket = self.submit(name, indices, version=version)
-        results = self.flush()
-        value = results.pop(ticket, None)
-        self._drained.update(results)  # don't lose concurrent tickets...
-        err = self.failed.pop(ticket, None)
-        # ...and defer their failures to the next flush — the one report,
-        # not one now and one again later
-        self._pending_failed.update(self.failed)
-        self.failed = {}
+        with obs.span(
+            "fleet.decode_at", payload=name, entries=int(np.size(indices))
+        ):
+            ticket = self.submit(name, indices, version=version)
+            results = self.flush()
+            value = results.pop(ticket, None)
+            self._drained.update(results)  # don't lose concurrent tickets...
+            err = self.failed.pop(ticket, None)
+            # ...and defer their failures to the next flush — the one
+            # report, not one now and one again later
+            self._pending_failed.update(self.failed)
+            self.failed = {}
         if err is not None:
             raise err
         return value
@@ -436,9 +455,14 @@ class FleetFrontend:
         # execute
         parts: dict[int, list[tuple[np.ndarray, np.ndarray]]] = {}
         part_failed: dict[int, Exception] = {}
-        for iid, items in plan.items():
-            if items:
-                self._run_instance(iid, items, parts, part_failed)
+        with obs.span(
+            "fleet.flush",
+            tickets=len(queue),
+            instances=sum(1 for items in plan.values() if items),
+        ):
+            for iid, items in plan.items():
+                if items:
+                    self._run_instance(iid, items, parts, part_failed)
         # reassemble in request order
         sizes = {ticket: idx.shape[0] for ticket, _, idx, _ in queue}
         for ticket, _, idx, _ in queue:
@@ -484,7 +508,7 @@ class FleetFrontend:
                 rid = t.submit(name, sub_idx, version=version)
                 pending.append((ticket, rid, pos))
                 inflight += cost
-                self._peak_inflight[iid] = max(self._peak_inflight[iid], inflight)
+                self._peak_gauge[iid].set_max(inflight)
             if pending:
                 self._flush_instance(iid, t, pending, parts, part_failed)
         except TransportError as e:
@@ -494,10 +518,12 @@ class FleetFrontend:
                     part_failed[ticket] = e
 
     def _flush_instance(self, iid, transport, pending, parts, part_failed) -> None:
-        t0 = time.perf_counter()
-        results, failures = transport.flush()
-        self._latency[iid].append(time.perf_counter() - t0)
-        self._flush_counts[iid] += 1
+        # latency is measured with raw perf_counter reads, independent of
+        # tracing, so the metrics are identical with tracing off or on
+        with obs.span("transport.flush", instance=iid, requests=len(pending)):
+            t0 = time.perf_counter()
+            results, failures = transport.flush()
+            self._lat_hist[iid].observe(time.perf_counter() - t0)
         for ticket, rid, pos in pending:
             if rid in results:
                 parts.setdefault(ticket, []).append((pos, results[rid]))

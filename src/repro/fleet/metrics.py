@@ -4,16 +4,28 @@
 :class:`~repro.fleet.transport.Transport` (``stats()`` returns the same
 JSON-able dict for an in-process service and a worker process — the
 serve layer's ``CacheStats.as_dict``), the admission-control gauges, and
-p50/p99 decode latency from the frontend's per-instance flush timings,
-then totals them fleet-wide.  Excluded (dead-transport) members are
-listed, not polled.  ``as_dict`` renders the snapshot JSON-able — the
-shape ``benchmarks/fleet_bench.py`` writes into ``BENCH_fleet.json``.
+decode latency off the frontend's per-instance
+:class:`repro.obs.Histogram` instruments, then totals them fleet-wide.
+
+Latency comes in TWO flavors per instance, both ``None`` (never a
+crash) when the instance has zero flushes:
+
+- ``decode_p50_ms`` / ``decode_p99_ms`` — EXACT percentiles over the
+  recent flush window (the semantics this schema always had);
+- ``decode_p50_ms_total`` / ``decode_p99_ms_total`` — all-time
+  estimates from the histogram's fixed log buckets, which survive any
+  amount of window wrap.
+
+An instance whose transport dies MID-POLL (``stats()`` raises
+``TransportError``) is demoted to the ``excluded`` list of the same
+snapshot — one dead worker costs one instance's row, not the collect.
+``as_dict`` renders the snapshot JSON-able — the shape
+``benchmarks/fleet_bench.py`` writes into ``BENCH_fleet.json``
+(extended over time, never broken).
 """
 from __future__ import annotations
 
 import dataclasses
-
-import numpy as np
 
 from repro.fleet.frontend import FleetFrontend
 from repro.fleet.transport import TransportError
@@ -54,9 +66,13 @@ class InstanceMetrics:
     cache: CacheCounters
     per_payload: dict[str, CacheCounters]
     peak_inflight_bytes: int
+    #: exact percentiles over the recent flush window; None if no flushes
     decode_p50_ms: float | None
     decode_p99_ms: float | None
-    flushes: int  # monotonic; latency percentiles cover the recent window
+    #: all-time bucket estimates (survive window wrap); None if no flushes
+    decode_p50_ms_total: float | None
+    decode_p99_ms_total: float | None
+    flushes: int  # monotonic (all-time), matches the _total percentiles
 
 
 @dataclasses.dataclass
@@ -90,6 +106,8 @@ class FleetMetrics:
                     "peak_inflight_bytes": m.peak_inflight_bytes,
                     "decode_p50_ms": m.decode_p50_ms,
                     "decode_p99_ms": m.decode_p99_ms,
+                    "decode_p50_ms_total": m.decode_p50_ms_total,
+                    "decode_p99_ms_total": m.decode_p99_ms_total,
                     "flushes": m.flushes,
                 }
                 for iid, m in self.instances.items()
@@ -97,10 +115,8 @@ class FleetMetrics:
         }
 
 
-def _percentile_ms(samples: list[float], q: float) -> float | None:
-    if not samples:
-        return None
-    return round(float(np.percentile(np.asarray(samples), q)) * 1e3, 4)
+def _ms(seconds: float | None) -> float | None:
+    return None if seconds is None else round(seconds * 1e3, 4)
 
 
 def collect(fleet: FleetFrontend) -> FleetMetrics:
@@ -120,15 +136,17 @@ def collect(fleet: FleetFrontend) -> FleetMetrics:
             name: CacheCounters.of(p)
             for name, p in stats["per_payload"].items()
         }
-        lat = fleet.latency_seconds(iid)
+        hist = fleet.latency_histogram(iid)
         instances[iid] = InstanceMetrics(
             instance=iid,
             cache=cache,
             per_payload=per_payload,
             peak_inflight_bytes=fleet.peak_inflight_bytes(iid),
-            decode_p50_ms=_percentile_ms(lat, 50),
-            decode_p99_ms=_percentile_ms(lat, 99),
-            flushes=fleet.flush_count(iid),
+            decode_p50_ms=_ms(hist.window_percentile(50)),
+            decode_p99_ms=_ms(hist.window_percentile(99)),
+            decode_p50_ms_total=_ms(hist.percentile(50)),
+            decode_p99_ms_total=_ms(hist.percentile(99)),
+            flushes=hist.count,
         )
         fleet_total.add(cache)
         for name, c in per_payload.items():

@@ -35,6 +35,22 @@ Wire format (little-endian)::
     str      := u16 len | utf-8 bytes
     blob     := u32 len | bytes
     array    := container.write_array encoding (dtype | ndim | shape | raw)
+
+Trace-context extension (all fields OPTIONAL and eof-guarded, so bodies
+without them parse exactly as before)::
+
+    OP_SUBMIT body  := str name | i64 version | array [| u64 tid | u64 sid]
+    OP_FLUSH  body  := [u8 flags [| u64 tid | u64 sid]]   # see FLUSH_*
+    OP_FLUSH  reply := ...results/failures... [| u8 has | span_block]
+    span_block      := f64 sender_now | u32 n | span*
+    span            := str name | u64 trace | u64 span | u64 parent
+                       | f64 t0 | f64 t1 | str attrs_json
+
+The (tid, sid) pair is the frontend's ambient trace context — the worker
+adopts it so its ``CodecService`` stage spans parent under the
+frontend's ``transport.flush`` span; the flush reply ships the worker's
+drained spans back with the worker's own monotonic clock so the
+frontend can re-base them onto ITS timeline (one stitched trace).
 """
 from __future__ import annotations
 
@@ -52,6 +68,7 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
+from repro import obs
 from repro.codecs.container import read_array, write_array
 from repro.serve.codec_service import CodecService, Ownership
 
@@ -151,6 +168,10 @@ class Writer:
         self.buf.write(struct.pack("<q", v))
         return self
 
+    def f64(self, v: float) -> "Writer":
+        self.buf.write(struct.pack("<d", v))
+        return self
+
     def str(self, s: str) -> "Writer":
         raw = s.encode("utf-8")[:65535]
         self.buf.write(struct.pack("<H", len(raw)) + raw)
@@ -196,6 +217,17 @@ class Reader:
     def i64(self) -> int:
         return struct.unpack("<q", self._take(8))[0]
 
+    def f64(self) -> float:
+        return struct.unpack("<d", self._take(8))[0]
+
+    def eof(self) -> bool:
+        """True at end of body — the guard for OPTIONAL trailing fields
+        (how the trace-context extension stays wire-compatible)."""
+        here = self.buf.tell()
+        ahead = bool(self.buf.read(1))
+        self.buf.seek(here)
+        return not ahead
+
     def str(self) -> str:
         return self._take(self.u16()).decode("utf-8")
 
@@ -231,6 +263,42 @@ def unpack_ownership(r: Reader) -> Ownership | None:
         else:
             sets.append(None)
     return Ownership(chunk_ids=sets[0], tile_ids=sets[1])
+
+
+# -- trace-context / span block (flush-reply extension) ---------------------
+#: OP_FLUSH body flag bits
+FLUSH_WANT_SPANS = 1  # worker should drain its recorder into the reply
+FLUSH_HAS_CTX = 2  # a (trace id, span id) pair follows the flags byte
+
+
+def pack_spans(w: Writer, spans: list[obs.Span]) -> None:
+    """Append a span block: ``f64 worker_now | u32 n | span*`` where one
+    span is ``str name | u64 trace | u64 span | u64 parent | f64 t0 |
+    f64 t1 | str attrs-json``.  ``worker_now`` is the sender's
+    ``perf_counter`` AT PACK TIME — the receiver subtracts it from its
+    own clock to re-base the timestamps (transit delay only shifts every
+    span by the same small amount)."""
+    w.f64(time.perf_counter())
+    w.u32(len(spans))
+    for s in spans:
+        w.str(s.name)
+        w.u64(s.trace_id).u64(s.span_id).u64(s.parent_id)
+        w.f64(s.t_start).f64(s.t_end)
+        w.str(json.dumps(s.attrs, default=str) if s.attrs else "")
+
+
+def unpack_spans(r: Reader) -> tuple[float, list[obs.Span]]:
+    """Inverse of :func:`pack_spans` -> (sender's clock, spans)."""
+    sender_now = r.f64()
+    spans = []
+    for _ in range(r.u32()):
+        name = r.str()
+        tid, sid, pid = r.u64(), r.u64(), r.u64()
+        t0, t1 = r.f64(), r.f64()
+        raw = r.str()
+        spans.append(obs.Span(name, tid, sid, pid, t0, t1,
+                              json.loads(raw) if raw else {}))
+    return sender_now, spans
 
 
 def parse_address(address: str) -> tuple[int, str | tuple[str, int]]:
@@ -571,20 +639,34 @@ class SocketTransport:
     def submit(self, name, indices, version=None) -> int:
         rid = self._next_rid
         self._next_rid += 1
-        body = (
+        w = (
             Writer()
             .str(name)
             .i64(-1 if version is None else int(version))
             .array(np.asarray(indices))
-            .bytes()
         )
-        self._send(OP_SUBMIT, rid, body)
+        if obs.enabled():
+            ctx = obs.current_context()
+            if ctx is not None:
+                w.u64(ctx[0]).u64(ctx[1])
+        self._send(OP_SUBMIT, rid, w.bytes())
         self._pending.append(rid)
         return rid
 
     def flush(self) -> tuple[dict[int, np.ndarray], dict[int, Exception]]:
         pending, self._pending = self._pending, []
-        r = self._request(OP_FLUSH)
+        w, want_spans = Writer(), False
+        flags = 0
+        if obs.enabled():
+            want_spans = True
+            flags |= FLUSH_WANT_SPANS
+            ctx = obs.current_context()
+            if ctx is not None:
+                flags |= FLUSH_HAS_CTX
+        w.u8(flags)
+        if flags & FLUSH_HAS_CTX:
+            w.u64(ctx[0]).u64(ctx[1])
+        r = self._request(OP_FLUSH, w.bytes())
         results: dict[int, np.ndarray] = {}
         failures: dict[int, Exception] = {}
         for _ in range(r.u32()):
@@ -598,6 +680,13 @@ class SocketTransport:
                 failures[rid] = RemoteError(
                     f"{self.instance_id}: ticket vanished on worker"
                 )
+        if want_spans and not r.eof() and r.u8():
+            worker_now, spans = unpack_spans(r)
+            obs.get_recorder().ingest(
+                spans,
+                clock_offset=time.perf_counter() - worker_now,
+                instance=self.instance_id,
+            )
         return results, failures
 
     def drain(self) -> None:

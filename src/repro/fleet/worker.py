@@ -13,7 +13,10 @@ filesystem).  It answers the transport protocol defined in
   frontend's request id);
 - ``OP_FLUSH`` resolves everything queued through the service's
   coalescing path and answers every outstanding request id exactly once
-  — result array or error string — in request-id order;
+  — result array or error string — in request-id order; when the
+  frontend requests tracing (``FLUSH_WANT_SPANS``) the worker's span
+  recorder follows that request and its buffered spans ride the reply,
+  timestamped on this process's clock for the frontend to re-base;
 - the rebalance verbs (``OP_SET_OWNERSHIP``/``OP_EXPORT_TILES``/
   ``OP_ADMIT_TILE``/``OP_DROP_UNOWNED``) make cross-process warm
   handoff work identically to the in-process path.
@@ -36,7 +39,10 @@ import socket
 import struct
 import sys
 
+from repro import obs
 from repro.fleet.transport import (
+    FLUSH_HAS_CTX,
+    FLUSH_WANT_SPANS,
     OP_ADMIT_TILE,
     OP_DROP_UNOWNED,
     OP_EXPORT_TILES,
@@ -55,12 +61,17 @@ from repro.fleet.transport import (
     ST_ERROR,
     ST_OK,
     Writer,
+    pack_spans,
     parse_address,
     recv_frame,
     send_frame,
     unpack_ownership,
 )
 from repro.serve.codec_service import CodecService
+
+#: was tracing enabled by THIS process's environment (vs a frontend
+#: request)? env-enabled tracing never turns off mid-session
+_ENV_TRACE = os.environ.get("REPRO_TRACE", "") not in ("", "0")
 
 
 class WorkerState:
@@ -98,15 +109,29 @@ def _handle(state: WorkerState, op: int, rid: int, r: Reader) -> bytes | None:
     if op == OP_SUBMIT:
         name = r.str()
         version = r.i64()  # -1 encodes version=None (single-tensor payloads)
+        arr = r.array()
+        ctx = (r.u64(), r.u64()) if not r.eof() else None
         try:
-            state.pending[rid] = svc.submit(
-                name, r.array(), version=None if version < 0 else version
-            )
+            with obs.remote_context(ctx):
+                state.pending[rid] = svc.submit(
+                    name, arr, version=None if version < 0 else version
+                )
         except Exception as e:  # noqa: BLE001 — deferred to flush, per protocol
             state.deferred[rid] = f"{type(e).__name__}: {e}"
         return None
     if op == OP_FLUSH:
-        out = svc.flush()
+        flags = 0 if r.eof() else r.u8()
+        ctx = (r.u64(), r.u64()) if flags & FLUSH_HAS_CTX else None
+        want_spans = bool(flags & FLUSH_WANT_SPANS)
+        # the worker's recorder follows the frontend's request, so tracing
+        # toggled mid-session on the frontend takes effect here too;
+        # REPRO_TRACE in the worker's own env keeps it on regardless
+        if want_spans and not obs.enabled():
+            obs.enable_tracing()
+        elif not want_spans and obs.enabled() and not _ENV_TRACE:
+            obs.disable_tracing()
+        with obs.remote_context(ctx):
+            out = svc.flush()
         results: list[tuple[int, object]] = []
         failures: list[tuple[int, str]] = list(state.deferred.items())
         for srid, ticket in state.pending.items():
@@ -125,6 +150,9 @@ def _handle(state: WorkerState, op: int, rid: int, r: Reader) -> bytes | None:
         w.u32(len(failures))
         for srid, msg in sorted(failures, key=lambda t: t[0]):
             w.u64(srid).str(msg)
+        if want_spans:
+            w.u8(1)
+            pack_spans(w, obs.get_recorder().drain())
         return w.bytes()
     if op == OP_STATS:
         return Writer().blob(

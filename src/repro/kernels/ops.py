@@ -24,6 +24,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import attention as _attention
 from repro.kernels import decode_tile as _dt
 from repro.kernels import lstm as _lstm
@@ -175,14 +176,15 @@ def nttd_decode_tile(
     if impl in ("auto", "fused"):
         impl = "pallas" if jax.default_backend() == "tpu" else "fused"
     heads = (w_first, b_first, w_mid, b_mid, w_last, b_last)
-    if impl == "ref":
-        return _ref.nttd_decode_tile(idx, emb, wi, wh, b, *heads)
-    if impl == "fused":
-        return _fused_oracle(idx, emb, wi, wh, b, *heads)
-    tile = tile_b or min(_dt.DEFAULT_TILE_B, max(8, idx.shape[0]))
-    idx_p, bsz = _pad_batch(idx, tile)
-    out = _dt.decode_tile(
-        idx_p, emb, wi, wh, b, *heads,
-        tile_b=tile, interpret=impl == "pallas_interpret",
-    )
-    return out[:bsz]
+    with obs.span("kernel_decode", impl=impl, b=int(idx.shape[0])):
+        if impl == "ref":
+            return _ref.nttd_decode_tile(idx, emb, wi, wh, b, *heads)
+        if impl == "fused":
+            return _fused_oracle(idx, emb, wi, wh, b, *heads)
+        tile = tile_b or min(_dt.DEFAULT_TILE_B, max(8, idx.shape[0]))
+        idx_p, bsz = _pad_batch(idx, tile)
+        out = _dt.decode_tile(
+            idx_p, emb, wi, wh, b, *heads,
+            tile_b=tile, interpret=impl == "pallas_interpret",
+        )
+        return out[:bsz]

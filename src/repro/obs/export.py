@@ -1,0 +1,173 @@
+"""Trace/telemetry export: Chrome trace-event JSON + structured JSONL.
+
+Two sinks:
+
+- :func:`export_chrome_trace` renders recorded spans as Chrome
+  trace-event format (the ``{"traceEvents": [...]}`` JSON object that
+  ``chrome://tracing`` and https://ui.perfetto.dev load directly).  Each
+  span becomes one complete ("ph": "X") event; fleet instances map to
+  numbered pids with ``process_name`` metadata events so the frontend
+  and every worker render as separate swim-lanes on ONE stitched
+  timeline.  An optional fleet-metrics snapshot rides along under the
+  top-level ``repro_metrics`` key (ignored by viewers, consumed by
+  ``python -m repro.obs.report``).
+
+- :class:`JsonlEventLog` appends one JSON object per line — the
+  fit-telemetry format.  ``repro.stream`` fitters and
+  ``repro.temporal.VersionedStore`` emit through the process-global
+  :func:`fit_event` hook, which is a no-op unless a sink was installed
+  (``set_fit_log(path)`` or ``REPRO_FIT_LOG=path``), so fitting pays
+  nothing when telemetry is off.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import IO
+
+from repro.obs.trace import Span, get_recorder
+
+
+def chrome_trace_events(spans: list[Span], time_base: float | None = None) -> list[dict]:
+    """Spans -> Chrome trace-event dicts (timestamps in microseconds,
+    re-based so the earliest span starts at ``ts=0``)."""
+    if time_base is None:
+        time_base = min((s.t_start for s in spans), default=0.0)
+    pids: dict[str, int] = {}
+    events: list[dict] = []
+    for s in spans:
+        pid = pids.get(s.instance)
+        if pid is None:
+            pid = pids[s.instance] = len(pids) + 1
+            events.append({
+                "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+                "args": {"name": s.instance},
+            })
+        events.append({
+            "name": s.name,
+            "cat": "repro",
+            "ph": "X",
+            "ts": round((s.t_start - time_base) * 1e6, 3),
+            "dur": round(max(s.t_end - s.t_start, 0.0) * 1e6, 3),
+            "pid": pid,
+            "tid": pid,
+            "args": dict(
+                s.attrs,
+                trace_id=f"{s.trace_id:x}",
+                span_id=f"{s.span_id:x}",
+                parent_id=f"{s.parent_id:x}",
+            ),
+        })
+    return events
+
+
+def export_chrome_trace(
+    path: str,
+    spans: list[Span] | None = None,
+    metrics: dict | None = None,
+) -> int:
+    """Write a Chrome trace-event JSON file; returns the span count.
+    ``spans`` defaults to a snapshot of the global recorder (buffer
+    unchanged); ``metrics`` (any JSON-able dict, e.g. the fleet metrics
+    roll-up's ``as_dict()``) is embedded under ``repro_metrics``."""
+    if spans is None:
+        spans = get_recorder().snapshot()
+    doc: dict = {
+        "traceEvents": chrome_trace_events(spans),
+        "displayTimeUnit": "ms",
+        "otherData": {"producer": "repro.obs", "spans": len(spans)},
+    }
+    if metrics is not None:
+        doc["repro_metrics"] = metrics
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return len(spans)
+
+
+# ---------------------------------------------------------------------------
+# structured-event JSONL (fit telemetry)
+# ---------------------------------------------------------------------------
+class JsonlEventLog:
+    """Append-only JSONL event sink; every ``emit`` is one flushed line,
+    so a crashed fit leaves a readable prefix."""
+
+    def __init__(self, path_or_file: str | IO[str]):
+        if isinstance(path_or_file, str):
+            self._f: IO[str] = open(path_or_file, "a")
+            self._owns = True
+        else:
+            self._f = path_or_file
+            self._owns = False
+        self._lock = threading.Lock()
+        self.events_written = 0
+
+    def emit(self, event: str, **fields) -> None:
+        rec = {"event": event, "t": round(time.time(), 6), **fields}
+        line = json.dumps(rec, default=float)
+        with self._lock:
+            self._f.write(line + "\n")
+            self._f.flush()
+            self.events_written += 1
+
+    def close(self) -> None:
+        with self._lock:
+            if self._owns:
+                self._f.close()
+
+    def __enter__(self) -> "JsonlEventLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+_FIT_LOG: JsonlEventLog | None = None
+_FIT_LOG_INIT = False
+_FIT_LOCK = threading.Lock()
+
+
+def set_fit_log(sink: str | IO[str] | JsonlEventLog | None) -> JsonlEventLog | None:
+    """Install (or clear, with ``None``) the process-global fit-telemetry
+    sink.  Returns the active log."""
+    global _FIT_LOG, _FIT_LOG_INIT
+    with _FIT_LOCK:
+        if _FIT_LOG is not None and sink is not _FIT_LOG:
+            _FIT_LOG.close()
+        if sink is None:
+            _FIT_LOG = None
+        elif isinstance(sink, JsonlEventLog):
+            _FIT_LOG = sink
+        else:
+            _FIT_LOG = JsonlEventLog(sink)
+        _FIT_LOG_INIT = True
+    return _FIT_LOG
+
+
+def fit_log() -> JsonlEventLog | None:
+    """The active fit-telemetry sink, honoring ``REPRO_FIT_LOG`` on first
+    use; ``None`` when telemetry is off."""
+    global _FIT_LOG_INIT
+    if not _FIT_LOG_INIT:
+        with _FIT_LOCK:
+            if not _FIT_LOG_INIT:
+                path = os.environ.get("REPRO_FIT_LOG")
+                if path:
+                    globals()["_FIT_LOG"] = JsonlEventLog(path)
+                globals()["_FIT_LOG_INIT"] = True
+    return _FIT_LOG
+
+
+def fit_telemetry_enabled() -> bool:
+    """Cheap guard for call sites whose FIELD computation has a cost
+    (e.g. forcing a device sync to read a loss scalar)."""
+    return fit_log() is not None
+
+
+def fit_event(event: str, **fields) -> None:
+    """Emit one fit-telemetry event; no-op (one attribute read) when no
+    sink is installed."""
+    log = fit_log()
+    if log is not None:
+        log.emit(event, **fields)

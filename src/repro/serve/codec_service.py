@@ -56,12 +56,13 @@ from __future__ import annotations
 
 import collections
 import concurrent.futures
+import contextlib
 import dataclasses
 from typing import Callable
 
 import numpy as np
 
-from repro import codecs
+from repro import codecs, obs
 from repro.codecs import container
 from repro.codecs.indexing import flat_to_multi, multi_to_flat, validate_indices
 from repro.temporal.delta import resolve_chain
@@ -340,7 +341,8 @@ class CodecService:
             )
         if sp.enc is None and sp.warm is not None:
             warm, sp.warm = sp.warm, None
-            warm.result()  # propagate a failed background warm verbatim
+            with obs.span("prefetch_wait", payload=name):
+                warm.result()  # propagate a failed background warm verbatim
         if sp.enc is None:
             if sp.ownership is not None and not sp.ownership.owns_payload():
                 raise NotOwnedError(
@@ -365,13 +367,15 @@ class CodecService:
         path), where submitting to the pool and waiting would deadlock."""
         self.cache_stats.miss(name)
         self._info[name].cache_misses += 1
-        reads = (
-            self._read_chunks(sp)
-            if pipelined
-            else [container.read_chunk(sp.view, c) for c in sp.chunks]
-        )
-        body = b"".join(reads)
-        sp.enc = codecs.get_codec(sp.codec).encoded_cls.from_bytes(body)
+        with obs.span("materialize", payload=name, chunks=len(sp.chunks)):
+            with obs.span("chunk_read", payload=name, chunks=len(sp.chunks)):
+                reads = (
+                    self._read_chunks(sp)
+                    if pipelined
+                    else [container.read_chunk(sp.view, c) for c in sp.chunks]
+                )
+                body = b"".join(reads)
+            sp.enc = codecs.get_codec(sp.codec).encoded_cls.from_bytes(body)
         self._info[name].payload_bytes = sp.enc.payload_bytes()
 
     def _warm_stream(self, name: str, sp: _StreamPayload) -> None:
@@ -434,11 +438,16 @@ class CodecService:
             self.cache_stats.miss(name)
             self._info[name].cache_misses += 1
             ve = sp.versions[v]
-            body = b"".join(
-                container.read_chunk(sp.view, c)
-                for c in sp.chunks[ve.chunk_start : ve.chunk_stop]
-            )
-            enc = codecs.get_codec(sp.codec).encoded_cls.from_bytes(body)
+            with obs.span("materialize", payload=name, version=v):
+                with obs.span(
+                    "chunk_read", payload=name,
+                    chunks=ve.chunk_stop - ve.chunk_start,
+                ):
+                    body = b"".join(
+                        container.read_chunk(sp.view, c)
+                        for c in sp.chunks[ve.chunk_start : ve.chunk_stop]
+                    )
+                enc = codecs.get_codec(sp.codec).encoded_cls.from_bytes(body)
             sp.vencs[v] = enc
             self._set_geometry(name, sp, enc)
         elif count:
@@ -499,16 +508,35 @@ class CodecService:
         checked on the BASE tile id, keeping all versions of a tile on
         one owner (that is what makes the warm handoff and the fleet
         routing version-independent)."""
-        shape = sp.shape
-        t = sp.tile_entries
-        n_entries = int(np.prod(shape))
-        flat = multi_to_flat(idx, shape)
+        flat = multi_to_flat(idx, sp.shape)
         if not len(flat):
             return np.zeros((0,), dtype=np.float64), 0
-        info = self._info[name]
-        tids = flat // t
+        tids = flat // sp.tile_entries
         uniq = [int(tid) for tid in np.unique(tids)]
         out = np.zeros((len(flat),), dtype=np.float64)
+        with obs.span(
+            "tile_decode", payload=name, version=version,
+            chain=len(chain), tiles=len(uniq),
+        ):
+            decoded = self._decode_chain_tiles(
+                name, sp, chain, uniq, flat, tids, out
+            )
+        return out, decoded
+
+    def _decode_chain_tiles(
+        self,
+        name: str,
+        sp: _StreamPayload,
+        chain: list[int],
+        uniq: list[int],
+        flat: np.ndarray,
+        tids: np.ndarray,
+        out: np.ndarray,
+    ) -> int:
+        t = sp.tile_entries
+        n_entries = int(np.prod(sp.shape))
+        shape = sp.shape
+        info = self._info[name]
         decoded = 0
         for v in chain:
             comp: codecs.Encoded | None = None
@@ -540,7 +568,7 @@ class CodecService:
                 out[mask] += np.asarray(tile[flat[mask] - tid * t], np.float64)
             if comp is not None:
                 self._account_version_state(name, sp, v, comp)
-        return out, decoded
+        return decoded
 
     # -------------------------------------------------------------- prefetch
     def _pool(self) -> concurrent.futures.ThreadPoolExecutor | None:
@@ -740,24 +768,26 @@ class CodecService:
             return flat_to_multi(np.arange(start, stop, dtype=np.int64), shape)
 
         pool = self._pool()
-        fut = None
-        if pool is not None and len(misses) > 1:
-            fut = pool.submit(build, misses[0])
-        for j, tid in enumerate(misses):
-            if fut is not None:
-                tpos = fut.result()
-                fut = pool.submit(build, misses[j + 1]) if j + 1 < len(misses) else None
-            else:
-                tpos = build(tid)
-            tile = self._decode_batched(enc, tpos)
-            tiles[tid] = tile
-            # unowned tiles decode through WITHOUT caching — correct
-            # mid-rebalance, and resident tile bytes stay this
-            # instance's shard of the fleet total
-            if sp.ownership is None or sp.ownership.owns_tile(tid):
-                self._cache_put(
-                    ("tile", name, tid), _CacheEntry(int(tile.nbytes), tile)
-                )
+        with obs.span("tile_decode", payload=name, tiles=len(misses)) if misses \
+                else contextlib.nullcontext():
+            fut = None
+            if pool is not None and len(misses) > 1:
+                fut = pool.submit(build, misses[0])
+            for j, tid in enumerate(misses):
+                if fut is not None:
+                    tpos = fut.result()
+                    fut = pool.submit(build, misses[j + 1]) if j + 1 < len(misses) else None
+                else:
+                    tpos = build(tid)
+                tile = self._decode_batched(enc, tpos)
+                tiles[tid] = tile
+                # unowned tiles decode through WITHOUT caching — correct
+                # mid-rebalance, and resident tile bytes stay this
+                # instance's shard of the fleet total
+                if sp.ownership is None or sp.ownership.owns_tile(tid):
+                    self._cache_put(
+                        ("tile", name, tid), _CacheEntry(int(tile.nbytes), tile)
+                    )
 
         out = np.empty(len(flat), dtype=next(iter(tiles.values())).dtype)
         for tid, tile in tiles.items():
@@ -791,32 +821,33 @@ class CodecService:
         only work that actually decoded.  ``version`` selects a v4
         payload's version (default: latest); single-tensor payloads
         reject it."""
-        sp = self._streams.get(name)
-        if sp is not None and sp.versions is not None:
-            v = self._resolve_version(name, sp, version)
-            shape = self._ensure_version_geometry(name, sp)
-            idx = validate_indices(name, shape, indices)
-            out, calls = self._decode_versioned(name, sp, idx, v)
-        else:
-            if version is not None:
-                raise ValueError(
-                    f"payload {name!r} is not versioned (version={version})"
-                )
-            enc = self._get(name)
-            idx = self._validate(name, enc, indices)
-            if sp is not None and sp.tile_entries:
-                out, calls = self._decode_tiled(name, sp, enc, idx)
+        with obs.span("decode_at", payload=name, entries=int(np.size(indices))):
+            sp = self._streams.get(name)
+            if sp is not None and sp.versions is not None:
+                v = self._resolve_version(name, sp, version)
+                shape = self._ensure_version_geometry(name, sp)
+                idx = validate_indices(name, shape, indices)
+                out, calls = self._decode_versioned(name, sp, idx, v)
             else:
-                out = self._decode_batched(enc, idx)
-                # ceil-div: 0 for an empty query, matching the tiled path
-                # (which reports 0 tiles decoded for an empty query)
-                calls = -(-idx.shape[0] // self.max_batch)
-            self._account_decode_state(name, enc)
-        info = self._info[name]
-        info.requests += 1
-        info.entries_decoded += idx.shape[0]
-        info.decode_calls += calls
-        return out
+                if version is not None:
+                    raise ValueError(
+                        f"payload {name!r} is not versioned (version={version})"
+                    )
+                enc = self._get(name)
+                idx = self._validate(name, enc, indices)
+                if sp is not None and sp.tile_entries:
+                    out, calls = self._decode_tiled(name, sp, enc, idx)
+                else:
+                    out = self._decode_batched(enc, idx)
+                    # ceil-div: 0 for an empty query, matching the tiled path
+                    # (which reports 0 tiles decoded for an empty query)
+                    calls = -(-idx.shape[0] // self.max_batch)
+                self._account_decode_state(name, enc)
+            info = self._info[name]
+            info.requests += 1
+            info.entries_decoded += idx.shape[0]
+            info.decode_calls += calls
+            return out
 
     # --------------------------------------------------------------- batched
     def submit(
@@ -858,17 +889,22 @@ class CodecService:
             by_group.setdefault((name, version), []).append((ticket, idx))
         self._queue.clear()
         results: dict[int, np.ndarray] = {}
-        for (name, version), reqs in by_group.items():
-            merged = np.concatenate([idx for _, idx in reqs], axis=0)
-            try:
-                values = self.decode_at(name, merged, version=version)
-            except Exception as e:  # noqa: BLE001 — isolate the bad group
-                for ticket, _ in reqs:
-                    self.failed[ticket] = e
-                continue
-            self._info[name].requests += len(reqs) - 1  # decode_at counted one
-            off = 0
-            for ticket, idx in reqs:
-                results[ticket] = values[off : off + idx.shape[0]]
-                off += idx.shape[0]
+        with obs.span(
+            "coalesce_flush",
+            tickets=sum(len(reqs) for reqs in by_group.values()),
+            groups=len(by_group),
+        ):
+            for (name, version), reqs in by_group.items():
+                merged = np.concatenate([idx for _, idx in reqs], axis=0)
+                try:
+                    values = self.decode_at(name, merged, version=version)
+                except Exception as e:  # noqa: BLE001 — isolate the bad group
+                    for ticket, _ in reqs:
+                        self.failed[ticket] = e
+                    continue
+                self._info[name].requests += len(reqs) - 1  # decode_at counted one
+                off = 0
+                for ticket, idx in reqs:
+                    results[ticket] = values[off : off + idx.shape[0]]
+                    off += idx.shape[0]
         return results

@@ -23,10 +23,13 @@ uninterrupted run bit-for-bit.
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.codecs.base import Encoded, StreamFitter, get_codec
 from repro.core import codec as codec_lib
 from repro.core import nttd, reorder, ttd
@@ -113,12 +116,14 @@ class NTTDStreamFitter(StreamFitter):
             rep = rng.integers(0, self._rfill, size=(steps, n_replay))
             pos = np.concatenate([pos, self._rpos[rep]], axis=1)
             val = np.concatenate([val, self._rval[rep]], axis=1)
-        self.params, self._opt_state, _ = self._epoch(
+        t0 = time.perf_counter()
+        self.params, self._opt_state, loss = self._epoch(
             self.params,
             self._opt_state,
             jnp.asarray(pos, jnp.int32),
             jnp.asarray(val, jnp.float32),
         )
+        train_elapsed = time.perf_counter() - t0
 
         # ---- reservoir insert (Algorithm R, vectorized per slab) ----------
         cap = self._rval.shape[0]
@@ -136,6 +141,20 @@ class NTTDStreamFitter(StreamFitter):
 
         self.entries_seen += len(vn)
         self.slabs_seen += 1
+        if obs.fit_telemetry_enabled():
+            # float(loss) forces a device sync — only pay it when logging
+            obs.fit_event(
+                "fit_slab",
+                codec="nttd",
+                step=self.slabs_seen - 1,
+                loss=float(loss),
+                entries=len(vn),
+                entries_per_sec=(
+                    len(vn) / train_elapsed if train_elapsed > 0 else None
+                ),
+                reservoir_fill=self._rfill,
+                reservoir_capacity=int(self._rval.shape[0]),
+            )
 
     def finalize(self) -> Encoded:
         from repro.codecs.adapters import NTTDEncoded
@@ -215,6 +234,15 @@ class TTICEStreamFitter(StreamFitter):
             r = max(int((s > self.rel_eps * max(vnorm, 1e-30)).sum()), 1)
             self._U = u[:, : min(r, self.max_rank)]
             self._coeffs.append(v @ self._U)
+            if obs.fit_telemetry_enabled():
+                obs.fit_event(
+                    "fit_slab",
+                    codec="tt_ice",
+                    step=len(self._coeffs),
+                    entries=n_rows * self.row,
+                    rank=int(self._U.shape[1]),
+                    rows_seen=self.rows_seen,
+                )
             return
         c = v @ self._U
         res = v - c @ self._U.T
@@ -229,6 +257,15 @@ class TTICEStreamFitter(StreamFitter):
             self._U = np.concatenate([self._U, u_new], axis=1)
             c = np.concatenate([c, v @ u_new], axis=1)
         self._coeffs.append(c)
+        if obs.fit_telemetry_enabled():
+            obs.fit_event(
+                "fit_slab",
+                codec="tt_ice",
+                step=len(self._coeffs),
+                entries=n_rows * self.row,
+                rank=int(self._U.shape[1]),
+                rows_seen=self.rows_seen,
+            )
 
     def finalize(self) -> Encoded:
         from repro.codecs.adapters import TTEncoded

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import obs
 from repro.codecs import container
 from repro.codecs.base import Encoded, get_codec
 from repro.stream.writer import ChunkedWriter
@@ -115,6 +116,14 @@ class VersionedStore:
             fit = _fitness(x32, self._hat)
         self._writer.sync()  # file on disk is valid after every append
         self._vid += 1
+        obs.fit_event(
+            "version_append",
+            version=vid,
+            keyframe=keyframe,
+            rekeyed=rekeyed,
+            bytes=nbytes,
+            fitness=fit,
+        )
         return {
             "version": vid,
             "keyframe": keyframe,

@@ -346,6 +346,55 @@ def test_metrics_roll_up(payload_path):
     json.dumps(d)  # JSON-able for BENCH_fleet.json
 
 
+def test_metrics_zero_flush_instance_reports_none_not_crash(payload_path):
+    """Satellite: an instance that never flushed reports None percentiles
+    (both windowed and all-time), not a crash, and zero flushes."""
+    fleet = FleetFrontend(2)
+    fleet.load_stream("t", payload_path, tile_entries=64)
+    m = collect(fleet)  # loaded but never queried: all instances idle
+    for im in m.instances.values():
+        assert im.flushes == 0
+        assert im.decode_p50_ms is None and im.decode_p99_ms is None
+        assert im.decode_p50_ms_total is None and im.decode_p99_ms_total is None
+    d = m.as_dict()
+    assert d["instances"]["i0"]["decode_p50_ms"] is None
+    assert d["instances"]["i0"]["decode_p99_ms_total"] is None
+
+    # after queries, both views populate and all-time tracks the window
+    fleet.decode_at("t", _idx(100))
+    m2 = collect(fleet)
+    flushed = [im for im in m2.instances.values() if im.flushes]
+    assert flushed
+    for im in flushed:
+        assert im.decode_p99_ms >= im.decode_p50_ms > 0
+        assert im.decode_p99_ms_total >= im.decode_p50_ms_total > 0
+
+
+def test_metrics_collect_survives_transport_dying_mid_poll(payload_path):
+    """Satellite: a transport that dies BETWEEN routing and the stats
+    poll is demoted to the excluded list of the same snapshot."""
+    from repro.fleet.transport import TransportError
+
+    # replication=2 so the survivors can still route the dead member's
+    # groups afterwards
+    fleet = FleetFrontend(3, replication=2)
+    fleet.load_stream("t", payload_path, tile_entries=64)
+    fleet.decode_at("t", _idx(100))
+
+    def dead_stats():
+        raise TransportError("i1: worker killed during metrics poll")
+
+    fleet.transports["i1"].stats = dead_stats
+    m = collect(fleet)
+    assert set(m.instances) == {"i0", "i2"}  # the dead row is absent...
+    assert m.excluded == ["i1"]  # ...and listed as excluded
+    assert "i1" in fleet.excluded  # routing skips it from now on
+    # the fleet keeps answering (and collecting) on the survivors
+    fleet.decode_at("t", _idx(80, seed=9))
+    m2 = collect(fleet)
+    assert set(m2.instances) == {"i0", "i2"} and m2.excluded == ["i1"]
+
+
 def test_per_payload_cache_stats_on_service(payload_path, tmp_path, payload):
     """Satellite: CodecService.cache_stats carries a per-payload breakdown."""
     p2 = str(tmp_path / "q.tcdc")

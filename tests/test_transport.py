@@ -409,3 +409,43 @@ def test_connect_retry_gives_up_with_clear_error():
             "ghost", "unix:/tmp/definitely-not-a-socket-xyz.sock",
             connect_timeout=0.5, retry_delay=0.1,
         )
+
+
+# ---------------------------------------------------------------------------
+# tracing is observational only: answers + counters identical on or off
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["local", "socket"])
+def test_tracing_on_off_bit_identical(payload_path, kind, monkeypatch):
+    from repro import obs
+
+    def run(traced: bool):
+        monkeypatch.setenv("REPRO_TRACE", "1" if traced else "0")
+        if traced:
+            obs.enable_tracing()
+            obs.get_recorder().clear()
+        else:
+            obs.disable_tracing()
+        t = (
+            LocalTransport("l0")
+            if kind == "local"
+            else _spawn("w0")  # worker inherits REPRO_TRACE from the env
+        )
+        try:
+            t.load_stream("t", payload_path, tile_entries=64)
+            tickets = [t.submit("t", _idx(n, seed=n)) for n in (3, 57, 200)]
+            results, failures = t.flush()
+            assert not failures
+            return [results[k] for k in tickets], t.stats()
+        finally:
+            t.close()
+
+    try:
+        res_off, stats_off = run(traced=False)
+        res_on, stats_on = run(traced=True)
+    finally:
+        obs.disable_tracing()
+        obs.get_recorder().clear()
+    for a, b in zip(res_off, res_on):
+        np.testing.assert_array_equal(a, b)  # bit-exact
+        assert a.dtype == b.dtype
+    assert stats_off == stats_on  # every cache counter identical
