@@ -24,6 +24,9 @@ fails CI when a headline metric regresses more than ``--tolerance``
                               gated against an ABSOLUTE 10%% ceiling, not the
                               baseline: the honest value hovers near zero, so
                               a relative tolerance would gate noise)
+- ``obs.canary_overhead_pct`` (BENCH_obs.json, the online-fitness-canary
+                              cell — same absolute 10%% ceiling, same
+                              rationale)
 
 Metrics whose BENCH file is absent are skipped unless named in
 ``--require`` (CI's tier1 job requires stream+fleet+kernels, the
@@ -125,6 +128,11 @@ GROUPS = {
         {
             "traced_overhead_pct": (
                 lambda runs: max(r["traced_overhead_pct"] for r in runs),
+                False,
+                10.0,
+            ),
+            "canary_overhead_pct": (
+                lambda runs: max(r["canary_overhead_pct"] for r in runs),
                 False,
                 10.0,
             ),

@@ -12,6 +12,7 @@
 #     scripts/run_tests.sh kernels          # kernel tests + fused-decode roofline
 #     scripts/run_tests.sh temporal         # versioned payloads + fig10 smoke
 #     scripts/run_tests.sh obs              # tracing/metrics suite + traced fleet smoke
+#     scripts/run_tests.sh slo              # SLO/canary/controller suites + autoscale drill
 #     scripts/run_tests.sh bench-gate       # BENCH_*.json vs committed baseline
 #     scripts/run_tests.sh -m 'not slow'    # pytest passthrough (custom select)
 #
@@ -122,6 +123,17 @@ phase_obs() {
     echo "obs OK: $(tr -d '\n' < benchmarks/results/BENCH_obs.json | head -c 200)"
 }
 
+phase_slo() {
+    # The closed observability loop: SLO engine + canary + controller unit
+    # suites, then the end-to-end autoscale drill — a REAL 3-worker socket
+    # fleet with an injected per-flush latency fault must breach the p99
+    # objective, admit a sleep-free standby, go idle, and retire it again,
+    # with every answer bit-identical to a resident CodecService, zero
+    # failed tickets, and the controller decisions visible as spans/events.
+    python -m pytest -x -q tests/test_slo.py tests/test_canary.py tests/test_controller.py
+    python scripts/slo_smoke.py
+}
+
 phase_bench_gate() {
     # Fail on >30% regression of the headline BENCH metrics vs the
     # committed baseline (scripts/check_bench.py --update reseeds it).
@@ -138,6 +150,7 @@ case "${1:-all}" in
     kernels)           phase_kernels ;;
     temporal)          phase_temporal ;;
     obs)               phase_obs ;;
+    slo)               phase_slo ;;
     bench-gate)        phase_bench_gate ;;
     all)
         phase_registry
@@ -149,6 +162,7 @@ case "${1:-all}" in
         phase_kernels
         phase_temporal
         phase_obs
+        phase_slo
         phase_bench_gate
         ;;
     *)

@@ -1,0 +1,172 @@
+#!/usr/bin/env python3
+"""End-to-end SLO/controller drill over a REAL 3-worker socket fleet.
+
+The CI acceptance cell for the metrics-driven autoscaler: three
+``repro.fleet.worker`` OS processes serve a chunked payload (with a
+TCDQ held-out block, canaries fully on) while every initial worker
+carries an injected ``--debug-flush-sleep-ms`` latency fault.  A
+:class:`FleetController` polls real ``collect()`` samples:
+
+1. drill traffic breaches the p99 objective -> the controller admits a
+   sleep-free standby (``s0``), live, behind the drain barrier;
+2. traffic stops -> the idle streak retires ``s0`` again;
+3. throughout, every answer is verified bit-identical against a single
+   resident ``CodecService`` and zero tickets fail;
+4. the whole drill is traced — controller decisions must show up as
+   ``controller.*`` spans in ``obs.report --format json`` and as
+   ``controller_decision`` events — and the live fleet is scraped once
+   through ``MetricsServer`` to prove the exposition path end to end.
+
+    PYTHONPATH=src python scripts/slo_smoke.py
+"""
+import sys
+import tempfile
+import urllib.request
+
+import numpy as np
+
+from repro import obs
+from repro.codecs import get_codec
+from repro.fleet import (
+    ControllerConfig,
+    FleetController,
+    FleetFrontend,
+    SocketTransport,
+    collect,
+)
+from repro.obs.exposition import render_exposition
+from repro.obs.report import load_trace, report_dict
+from repro.obs.serve_metrics import MetricsServer
+from repro.serve.codec_service import CodecService
+from repro.stream import sample_heldout, write_chunked
+
+SHAPE = (16, 16, 8)
+SLEEP_MS = 30.0  # injected per-flush latency fault on the initial workers
+N_TICKS_MAX = 12
+
+
+def _payload(tmp: str) -> str:
+    x = np.random.default_rng(0).random(SHAPE).astype(np.float32)
+    enc = get_codec("ttd").fit(x, max_rank=4)
+    path = f"{tmp}/slo_smoke.tcdc"
+    write_chunked(path, enc, chunk_bytes=1024,
+                  heldout=sample_heldout(x, 128, seed=0))
+    return path
+
+
+def _batches(n=8, per=100):
+    rng = np.random.default_rng(2)
+    return [
+        np.stack([rng.integers(0, s, per) for s in SHAPE], axis=1)
+        for _ in range(n)
+    ]
+
+
+def _factory(iid: str):
+    # initial workers (w*) carry the latency fault; standbys (s*) do not
+    return SocketTransport.spawn(
+        iid,
+        timeout=30.0,
+        canary_fraction=1.0,
+        debug_flush_sleep_ms=SLEEP_MS if iid.startswith("w") else 0.0,
+    )
+
+
+def main() -> int:
+    with tempfile.TemporaryDirectory() as tmp:
+        path = _payload(tmp)
+        batches = _batches()
+        single = CodecService()
+        single.load_stream("e", path, tile_entries=256)
+        reference = [single.decode_at("e", idx) for idx in batches]
+
+        obs.enable_tracing()
+        obs.clear_events()
+        fleet = FleetFrontend(
+            ["w0", "w1", "w2"], transport_factory=_factory
+        )
+        ctl = FleetController(fleet, ControllerConfig(
+            p99_target_ms=5.0,
+            breach_evals=2, clear_evals=1,
+            idle_flushes_per_eval=1.0, idle_evals=2, cooldown_evals=1,
+            min_instances=3, max_instances=4,
+        ))
+        try:
+            fleet.load_stream("e", path, tile_entries=256)
+
+            def serve_round():
+                for k, idx in enumerate(batches):
+                    out = fleet.decode_at("e", idx)
+                    assert np.array_equal(out, reference[k]), (
+                        f"answer {k} diverged from the resident reference"
+                    )
+                assert not fleet.failed, f"failed tickets: {fleet.failed}"
+
+            # phase 1: drill traffic under the latency fault -> scale up
+            scaled_up_at = None
+            for tick in range(N_TICKS_MAX):
+                serve_round()
+                d = ctl.step()
+                if d.action == "scale_up":
+                    scaled_up_at = tick
+                    break
+            assert scaled_up_at is not None, (
+                f"no scale_up in {N_TICKS_MAX} ticks: "
+                f"{[d.action for d in ctl.decisions]}"
+            )
+            assert "s0" in fleet.transports and len(fleet.transports) == 4
+            serve_round()  # answers still bit-identical on the 4-wide ring
+
+            # one live scrape through the exposition HTTP path
+            snap = collect(fleet).as_dict()
+            with MetricsServer(lambda: render_exposition(fleet=snap)) as srv:
+                host, port = srv.address
+                page = urllib.request.urlopen(
+                    f"http://{host}:{port}/metrics", timeout=10
+                ).read().decode()
+            assert "repro_fleet_instances 4" in page, page[:400]
+            assert "repro_fleet_canary_checks" in page, page[:400]
+            assert snap["canary"]["e"]["checks"] > 0
+
+            # phase 2: stop traffic -> idle streak retires the standby
+            scaled_down_at = None
+            for tick in range(N_TICKS_MAX):
+                d = ctl.step()
+                if d.action == "scale_down":
+                    scaled_down_at = tick
+                    break
+            assert scaled_down_at is not None, (
+                f"no scale_down in {N_TICKS_MAX} idle ticks: "
+                f"{[d.action for d in ctl.decisions]}"
+            )
+            assert "s0" not in fleet.transports and len(fleet.transports) == 3
+            serve_round()  # and still bit-identical after the retire
+            final_metrics = collect(fleet).as_dict()
+        finally:
+            fleet.close()
+            obs.disable_tracing()
+
+        # the drill must be visible in the trace and the event stream
+        trace = f"{tmp}/slo_smoke_trace.json"
+        obs.export_chrome_trace(trace, metrics=final_metrics)
+        doc = report_dict(load_trace(trace), top=5)
+        stages = {r["stage"] for r in doc["stages"]}
+        for want in ("controller.step", "controller.scale_up",
+                     "controller.scale_down"):
+            assert want in stages, f"missing {want} span in {sorted(stages)}"
+        acts = [e["action"] for e in obs.events("controller_decision")]
+        assert acts.count("scale_up") == 1 and acts.count("scale_down") == 1
+
+        obs.get_recorder().clear()
+        print(
+            "slo smoke OK: scale_up tick="
+            f"{scaled_up_at} scale_down tick={scaled_down_at} "
+            f"decisions={acts} canary_checks="
+            f"{final_metrics['canary']['e']['checks']} "
+            f"failed_tickets=0 bit_identical=True"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

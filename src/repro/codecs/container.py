@@ -14,14 +14,25 @@ the moment the writer closes — no seeking back to patch a length field:
 
     header (as above) | chunk bytes ... | footer | u64 footer_len | 'TCDX'
     footer = chunk index | [ranges block] | [version-index block]
+                         | [held-out block]
     chunk index   = u32 n_chunks | n x (u64 offset | u64 length | u32 crc32)
     ranges block  = 'TCDR' | n x (u64 entry_start | u64 entry_stop)
     version index = 'TCDV' | u32 n_versions
                            | n x (i64 base | u32 chunk_start | u32 chunk_stop)
+    held-out      = 'TCDQ' | u32 n_entries | n x u64 flat_index | n x f64 value
 
 The footer blocks after the chunk index are optional and magic-tagged,
 parsed in the fixed order above; any trailing bytes the blocks do not
 account for make the footer corrupt.
+
+The held-out (``TCDQ``) block carries ground-truth entries SAMPLED FROM
+THE ORIGINAL TENSOR at fit time (flat index + exact value), recorded by
+``repro.stream.ChunkedWriter``.  The serve layer's online fitness
+canaries re-decode these entries on a sampled fraction of live traffic
+and compare against the recorded truth — quality stays an observed
+signal after deployment instead of a write-time constant.  Files without
+the block (every pre-existing v2/v3/v4 container) load and serve
+unchanged; canaries just stay off for them.
 
 Delta layout (container **v4**: ``u16 version=4`` with
 ``FLAG_CHUNKED | FLAG_DELTA``, written by ``repro.stream.writer`` in
@@ -67,6 +78,7 @@ DELTA_VERSION = 4  # container carrying a version-index (delta chain) block
 FOOTER_MAGIC = b"TCDX"
 RANGES_MAGIC = b"TCDR"  # optional per-chunk entry-range block in the footer
 VINDEX_MAGIC = b"TCDV"  # optional version-index block in the footer
+HELDOUT_MAGIC = b"TCDQ"  # optional held-out ground-truth block in the footer
 FLAG_CHUNKED = 0x01
 FLAG_DELTA = 0x02  # chunk index is partitioned into versions (v4 only)
 _LEGACY_NTTD_VERSION = 2
@@ -166,6 +178,33 @@ class VersionEntry:
         return self.base < 0
 
 
+@dataclasses.dataclass(frozen=True)
+class HeldoutEntries:
+    """Fit-time ground truth for online fitness canaries: exact values of
+    ``n`` entries of the ORIGINAL tensor, addressed by flat index.  Both
+    arrays are the footer block verbatim (int64 indices, float64 values),
+    so recording and re-reading round-trips bit-exactly."""
+
+    indices: np.ndarray  # [n] int64 flat indices into the original tensor
+    values: np.ndarray   # [n] float64 original values at those indices
+
+    def __post_init__(self):
+        idx = np.ascontiguousarray(np.asarray(self.indices, dtype=np.int64))
+        vals = np.ascontiguousarray(np.asarray(self.values, dtype=np.float64))
+        if idx.ndim != 1 or vals.ndim != 1 or len(idx) != len(vals):
+            raise ValueError(
+                f"held-out indices/values must be equal-length 1-D arrays, "
+                f"got {idx.shape} / {vals.shape}"
+            )
+        if len(idx) and int(idx.min()) < 0:
+            raise ValueError("held-out flat indices must be non-negative")
+        object.__setattr__(self, "indices", idx)
+        object.__setattr__(self, "values", vals)
+
+    def __len__(self) -> int:
+        return len(self.indices)
+
+
 def pack_header(codec_name: str, flags: int = 0, version: int = VERSION) -> bytes:
     name = codec_name.encode("ascii")
     if not name or len(name) > 255:
@@ -174,7 +213,9 @@ def pack_header(codec_name: str, flags: int = 0, version: int = VERSION) -> byte
 
 
 def pack_footer(
-    chunks: list[ChunkEntry], versions: list[VersionEntry] | None = None
+    chunks: list[ChunkEntry],
+    versions: list[VersionEntry] | None = None,
+    heldout: HeldoutEntries | None = None,
 ) -> bytes:
     footer = struct.pack("<I", len(chunks)) + b"".join(
         struct.pack("<QQI", c.offset, c.length, c.crc) for c in chunks
@@ -187,6 +228,13 @@ def pack_footer(
     if versions is not None:
         footer += VINDEX_MAGIC + struct.pack("<I", len(versions)) + b"".join(
             struct.pack("<qII", v.base, v.chunk_start, v.chunk_stop) for v in versions
+        )
+    if heldout is not None and len(heldout):
+        footer += (
+            HELDOUT_MAGIC
+            + struct.pack("<I", len(heldout))
+            + heldout.indices.astype("<i8").tobytes()
+            + heldout.values.astype("<f8").tobytes()
         )
     return footer + struct.pack("<Q", len(footer)) + FOOTER_MAGIC
 
@@ -224,9 +272,10 @@ def _validate_versions(
 
 def _parse_footer(
     data, header_end: int, ctx: str = ""
-) -> tuple[list[ChunkEntry], list[VersionEntry] | None]:
+) -> tuple[list[ChunkEntry], list[VersionEntry] | None, HeldoutEntries | None]:
     """Parse the trailer-addressed footer: chunk index, then the optional
-    magic-tagged TCDR (entry ranges) and TCDV (version index) blocks."""
+    magic-tagged TCDR (entry ranges), TCDV (version index), and TCDQ
+    (held-out ground truth) blocks."""
     if len(data) < header_end + _TRAILER_LEN:
         raise ValueError(f"{ctx}truncated payload: chunk trailer")
     if bytes(data[-4:]) != FOOTER_MAGIC:
@@ -265,6 +314,22 @@ def _parse_footer(
         ]
         pos += 16 * nv
         _validate_versions(versions, n, ctx)
+    heldout: HeldoutEntries | None = None
+    if footer[pos : pos + 4] == HELDOUT_MAGIC:
+        if len(footer) < pos + 8:
+            raise ValueError(f"{ctx}truncated payload: held-out block")
+        (nq,) = struct.unpack("<I", footer[pos + 4 : pos + 8])
+        pos += 8
+        if nq == 0:
+            raise ValueError(f"{ctx}corrupt payload: empty held-out block")
+        if len(footer) < pos + 16 * nq:
+            raise ValueError(f"{ctx}truncated payload: held-out block")
+        idx = np.frombuffer(footer, dtype="<i8", count=nq, offset=pos)
+        vals = np.frombuffer(footer, dtype="<f8", count=nq, offset=pos + 8 * nq)
+        if len(idx) and int(idx.min()) < 0:
+            raise ValueError(f"{ctx}corrupt payload: held-out index negative")
+        heldout = HeldoutEntries(idx, vals)
+        pos += 16 * nq
     if pos != len(footer):
         raise ValueError(f"{ctx}corrupt payload: chunk index length mismatch")
     chunks = []
@@ -274,20 +339,20 @@ def _parse_footer(
             raise ValueError(f"{ctx}corrupt payload: chunk outside data region")
         start, stop = ranges[i] if ranges is not None else (None, None)
         chunks.append(ChunkEntry(off, length, crc, start, stop))
-    return chunks, versions
+    return chunks, versions, heldout
 
 
 def _check_delta(
     data, flags: int, header_end: int, ctx: str = ""
-) -> tuple[list[ChunkEntry], list[VersionEntry]]:
+) -> tuple[list[ChunkEntry], list[VersionEntry], HeldoutEntries | None]:
     """Parse + validate a v4 footer: both delta flags and a version index
     are mandatory, so a v4 file is never silently read as a single tensor."""
     if not (flags & FLAG_CHUNKED) or not (flags & FLAG_DELTA):
         raise ValueError(f"{ctx}corrupt payload: v4 container without delta flags")
-    chunks, versions = _parse_footer(data, header_end, ctx)
+    chunks, versions, heldout = _parse_footer(data, header_end, ctx)
     if versions is None:
         raise ValueError(f"{ctx}corrupt payload: v4 container missing version index")
-    return chunks, versions
+    return chunks, versions, heldout
 
 
 def read_chunk(data, chunk: ChunkEntry) -> bytes:
@@ -323,7 +388,7 @@ def load_bytes(data: bytes) -> Encoded:
         raise ValueError(f"unsupported container version {version}")
     flags, name, off = _parse_header(data)
     if version == DELTA_VERSION:
-        chunks, versions = _check_delta(data, flags, off)
+        chunks, versions, _ = _check_delta(data, flags, off)
         try:
             codec = get_codec(name)
         except KeyError:
@@ -338,7 +403,7 @@ def load_bytes(data: bytes) -> Encoded:
     if flags & FLAG_DELTA:
         raise ValueError("corrupt payload: delta flag on a v3 container")
     if flags & FLAG_CHUNKED:
-        chunks, versions = _parse_footer(data, off)
+        chunks, versions, _ = _parse_footer(data, off)
         if versions is not None:
             raise ValueError("corrupt payload: version index on a v3 container")
         body = b"".join(read_chunk(data, c) for c in chunks)
@@ -378,7 +443,9 @@ class OpenContainer:
     """Lazily opened container: header + footer parsed, chunk bytes mmapped.
 
     ``versions`` is ``None`` for a plain v3 (single tensor) file and the
-    validated version index for a v4 delta file.
+    validated version index for a v4 delta file.  ``heldout`` is the
+    fit-time ground-truth sample from the optional ``TCDQ`` footer block
+    (``None`` for files written without one — every legacy container).
     """
 
     codec: str
@@ -386,6 +453,7 @@ class OpenContainer:
     chunks: list[ChunkEntry]
     versions: list[VersionEntry] | None
     view: memoryview
+    heldout: HeldoutEntries | None = None
 
     @property
     def is_versioned(self) -> bool:
@@ -420,12 +488,12 @@ def open_container(path: str) -> OpenContainer:
         flags, name, off = _parse_header(view)
         ctx = f"{path}: "
         if version == DELTA_VERSION:
-            chunks, versions = _check_delta(view, flags, off, ctx)
-            return OpenContainer(name, flags, chunks, versions, view)
+            chunks, versions, heldout = _check_delta(view, flags, off, ctx)
+            return OpenContainer(name, flags, chunks, versions, view, heldout)
         if flags & FLAG_DELTA:
             raise ValueError(f"{ctx}corrupt payload: delta flag on a v3 container")
         if flags & FLAG_CHUNKED:
-            chunks, versions = _parse_footer(view, off, ctx)
+            chunks, versions, heldout = _parse_footer(view, off, ctx)
             if versions is not None:
                 raise ValueError(
                     f"{ctx}corrupt payload: version index on a v3 container"
@@ -436,8 +504,8 @@ def open_container(path: str) -> OpenContainer:
             body_len, crc = struct.unpack("<QI", bytes(view[off : off + 12]))
             if len(view) < off + 12 + body_len:
                 raise ValueError(f"{ctx}truncated payload: body")
-            chunks = [ChunkEntry(off + 12, body_len, crc)]
-        return OpenContainer(name, flags, chunks, None, view)
+            chunks, heldout = [ChunkEntry(off + 12, body_len, crc)], None
+        return OpenContainer(name, flags, chunks, None, view, heldout)
     except Exception:
         view.release()
         mm.close()

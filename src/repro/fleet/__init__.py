@@ -15,6 +15,11 @@ logical service:
     rebalance(fleet, remove=["i3"])     # drain -> move chunks -> evict
     collect(fleet).as_dict()            # fleet-wide cache + latency roll-up
 
+``controller`` closes the loop: a :class:`FleetController` polls
+``collect()`` against declarative SLOs (``repro.obs.slo``) and calls
+``rebalance`` itself — sustained p99 breach admits a standby, sustained
+idle retires one, with hysteresis + cooldown so it cannot flap.
+
 Every instance mmaps the same container-v3 file; a consistent-hash ring
 (``router``) over the file's chunk index entries decides which instances
 own a payload — only owners materialize its body — and, when
@@ -40,6 +45,12 @@ so the same fleet spans processes —
 — with identical (bit-exact) answers; a dead worker becomes a routed
 ``excluded`` instance instead of a hang.
 """
+from repro.fleet.controller import (
+    ControllerConfig,
+    Decision,
+    FleetController,
+    ScalingPolicy,
+)
 from repro.fleet.frontend import FleetFrontend
 from repro.fleet.metrics import CacheCounters, FleetMetrics, InstanceMetrics, collect
 from repro.fleet.rebalance import RebalanceReport, rebalance
@@ -54,6 +65,9 @@ from repro.fleet.transport import (
 
 __all__ = [
     "CacheCounters",
+    "ControllerConfig",
+    "Decision",
+    "FleetController",
     "FleetFrontend",
     "FleetMetrics",
     "HashRing",
@@ -62,6 +76,7 @@ __all__ = [
     "PayloadRoute",
     "RebalanceReport",
     "RemoteError",
+    "ScalingPolicy",
     "SocketTransport",
     "Transport",
     "TransportError",

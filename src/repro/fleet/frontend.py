@@ -74,6 +74,9 @@ class FleetFrontend:
         latency_window: int = 2048,
         transport_factory: Callable[[str], Transport] | None = None,
         prefetch: bool = False,
+        canary_fraction: float = 0.0,
+        canary_seed: int = 0,
+        canary_min_fitness: float | None = None,
     ):
         if isinstance(instances, int):
             if instances < 1:
@@ -86,7 +89,9 @@ class FleetFrontend:
         self._transport_factory = transport_factory or (
             lambda iid: LocalTransport(
                 iid, cache_bytes=cache_bytes, max_batch=max_batch,
-                prefetch=prefetch,
+                prefetch=prefetch, canary_fraction=canary_fraction,
+                canary_seed=canary_seed,
+                canary_min_fitness=canary_min_fitness,
             )
         )
         if isinstance(instances, dict):
@@ -125,6 +130,10 @@ class FleetFrontend:
         self.excluded: set[str] = set()
         #: instance -> the TransportError that excluded it
         self.exclusion_errors: dict[str, TransportError] = {}
+        #: CUMULATIVE exclusion count — never decremented (retiring a dead
+        #: member clears ``excluded`` but not this), so metrics consumers
+        #: can tell a fresh death from an old one
+        self.exclusions_total = 0
         #: per-instance flush-latency histograms + peak-inflight gauges
         #: (all-time buckets AND an exact recent window, bounded memory)
         self.metrics = obs.MetricsRegistry()
@@ -175,6 +184,7 @@ class FleetFrontend:
         if iid not in self.excluded:
             self.excluded.add(iid)
             self.exclusion_errors[iid] = err
+            self.exclusions_total += 1
 
     def spawn_instance(self, iid: str) -> Transport:
         """Build a member with this fleet's transport factory and load

@@ -363,10 +363,15 @@ class LocalTransport:
         cache_bytes: int | None = None,
         max_batch: int = 65536,
         prefetch: bool = False,
+        canary_fraction: float = 0.0,
+        canary_seed: int = 0,
+        canary_min_fitness: float | None = None,
     ):
         self.instance_id = instance_id
         self.service = service or CodecService(
-            max_batch=max_batch, cache_bytes=cache_bytes, prefetch=prefetch
+            max_batch=max_batch, cache_bytes=cache_bytes, prefetch=prefetch,
+            canary_fraction=canary_fraction, canary_seed=canary_seed,
+            canary_min_fitness=canary_min_fitness,
         )
         self._next_rid = 0
         self._pending: dict[int, int] = {}  # rid -> service ticket
@@ -412,7 +417,7 @@ class LocalTransport:
         self.flush()
 
     def stats(self) -> dict:
-        return self.service.cache_stats.as_dict()
+        return self.service.stats()
 
     def set_ownership(self, name, ownership) -> None:
         self.service.set_ownership(name, ownership)
@@ -563,11 +568,17 @@ class SocketTransport:
         address: str | None = None,
         python: str | None = None,
         prefetch: bool = False,
+        canary_fraction: float = 0.0,
+        canary_seed: int = 0,
+        canary_min_fitness: float | None = None,
+        debug_flush_sleep_ms: float = 0.0,
     ) -> "SocketTransport":
         """Launch ``python -m repro.fleet.worker`` as a child process and
         connect to it.  Default address is a Unix socket in a fresh temp
         dir; pass ``tcp:host:port`` to cross machines.  The returned
-        transport owns the process — ``close()`` shuts it down."""
+        transport owns the process — ``close()`` shuts it down.
+        ``debug_flush_sleep_ms`` is the worker's latency fault injector
+        (SLO drills); leave 0 outside tests."""
         sock_dir = None
         if address is None:
             sock_dir = tempfile.mkdtemp(prefix="repro-fleet-")
@@ -592,6 +603,14 @@ class SocketTransport:
             cmd += ["--cache-bytes", str(cache_bytes)]
         if prefetch:
             cmd += ["--prefetch"]
+        if canary_fraction:
+            cmd += ["--canary-fraction", str(canary_fraction)]
+        if canary_seed:
+            cmd += ["--canary-seed", str(canary_seed)]
+        if canary_min_fitness is not None:
+            cmd += ["--canary-min-fitness", str(canary_min_fitness)]
+        if debug_flush_sleep_ms:
+            cmd += ["--debug-flush-sleep-ms", str(debug_flush_sleep_ms)]
         proc = subprocess.Popen(cmd, env=env)
         try:
             t = cls(

@@ -38,6 +38,7 @@ import os
 import socket
 import struct
 import sys
+import time
 
 from repro import obs
 from repro.fleet.transport import (
@@ -78,13 +79,18 @@ class WorkerState:
     """One connection's request state: the owned service plus the
     pipelined submits awaiting the next flush."""
 
-    def __init__(self, service: CodecService):
+    def __init__(self, service: CodecService, flush_sleep_s: float = 0.0):
         self.service = service
         #: request id -> service ticket, in arrival order
         self.pending: dict[int, int] = {}
         #: request id -> submit-time error message, reported at flush
         self.deferred: dict[int, str] = {}
         self.shutdown = False
+        #: latency fault injector (--debug-flush-sleep-ms): every flush
+        #: sleeps this long FIRST, so an SLO drill can breach a p99 target
+        #: without touching the service's decode path (answers stay
+        #: trivially bit-identical)
+        self.flush_sleep_s = flush_sleep_s
 
 
 def _handle(state: WorkerState, op: int, rid: int, r: Reader) -> bytes | None:
@@ -120,6 +126,8 @@ def _handle(state: WorkerState, op: int, rid: int, r: Reader) -> bytes | None:
             state.deferred[rid] = f"{type(e).__name__}: {e}"
         return None
     if op == OP_FLUSH:
+        if state.flush_sleep_s > 0:
+            time.sleep(state.flush_sleep_s)
         flags = 0 if r.eof() else r.u8()
         ctx = (r.u64(), r.u64()) if flags & FLUSH_HAS_CTX else None
         want_spans = bool(flags & FLUSH_WANT_SPANS)
@@ -156,7 +164,7 @@ def _handle(state: WorkerState, op: int, rid: int, r: Reader) -> bytes | None:
         return w.bytes()
     if op == OP_STATS:
         return Writer().blob(
-            json.dumps(svc.cache_stats.as_dict()).encode("utf-8")
+            json.dumps(svc.stats()).encode("utf-8")
         ).bytes()
     if op == OP_SET_OWNERSHIP:
         name = r.str()
@@ -185,9 +193,11 @@ def _handle(state: WorkerState, op: int, rid: int, r: Reader) -> bytes | None:
     raise ProtocolError(f"unknown opcode {op}")
 
 
-def serve_connection(conn: socket.socket, service: CodecService) -> None:
+def serve_connection(
+    conn: socket.socket, service: CodecService, flush_sleep_s: float = 0.0
+) -> None:
     """Run the request loop until EOF, shutdown, or a framing violation."""
-    state = WorkerState(service)
+    state = WorkerState(service, flush_sleep_s)
     while not state.shutdown:
         try:
             payload = recv_frame(conn)
@@ -229,6 +239,19 @@ def main(argv: list[str] | None = None) -> int:
         action="store_true",
         help="overlap chunk reads / tile-input builds with decode compute",
     )
+    parser.add_argument(
+        "--canary-fraction", type=float, default=0.0,
+        help="fraction of decode_at calls that run an online fitness canary",
+    )
+    parser.add_argument("--canary-seed", type=int, default=0)
+    parser.add_argument(
+        "--canary-min-fitness", type=float, default=None,
+        help="emit quality_breach events below this fitness",
+    )
+    parser.add_argument(
+        "--debug-flush-sleep-ms", type=float, default=0.0,
+        help="TESTING ONLY: sleep before every flush (latency fault injection)",
+    )
     args = parser.parse_args(argv)
 
     family, addr = parse_address(args.listen)
@@ -245,11 +268,16 @@ def main(argv: list[str] | None = None) -> int:
         max_batch=args.max_batch,
         cache_bytes=args.cache_bytes,
         prefetch=args.prefetch,
+        canary_fraction=args.canary_fraction,
+        canary_seed=args.canary_seed,
+        canary_min_fitness=args.canary_min_fitness,
     )
     try:
         conn, _ = sock.accept()
         with conn:
-            serve_connection(conn, service)
+            serve_connection(
+                conn, service, flush_sleep_s=args.debug_flush_sleep_ms / 1e3
+            )
     finally:
         sock.close()
         if family == socket.AF_UNIX:

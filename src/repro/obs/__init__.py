@@ -26,6 +26,7 @@ Fit-time telemetry rides the same package: ``REPRO_FIT_LOG=fit.jsonl``
 entries/sec, reservoir occupancy) and ``VersionedStore`` rekey decisions
 as JSONL.
 """
+from repro.obs.events import clear_events, emit_event, events
 from repro.obs.export import (
     JsonlEventLog,
     chrome_trace_events,
@@ -63,11 +64,14 @@ __all__ = [
     "Span",
     "TraceRecorder",
     "chrome_trace_events",
+    "clear_events",
     "current_context",
     "default_latency_buckets",
     "disable_tracing",
+    "emit_event",
     "enable_tracing",
     "enabled",
+    "events",
     "export_chrome_trace",
     "fit_event",
     "fit_log",

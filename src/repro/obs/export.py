@@ -91,24 +91,76 @@ def export_chrome_trace(
 # ---------------------------------------------------------------------------
 class JsonlEventLog:
     """Append-only JSONL event sink; every ``emit`` is one flushed line,
-    so a crashed fit leaves a readable prefix."""
+    so a crashed fit leaves a readable prefix.
 
-    def __init__(self, path_or_file: str | IO[str]):
+    ``max_bytes`` bounds the sink so a week-long ``fit_stream`` cannot
+    fill the disk: a path-owned log ROTATES (``path`` -> ``path.1`` ->
+    ... -> ``path.{backups}``, oldest dropped) and keeps writing, so the
+    newest events always survive; a borrowed file object has nowhere to
+    rotate to, so over-limit events are DROPPED and counted in
+    ``events_dropped`` instead.  One event larger than the whole limit
+    still rotates-then-writes (the alternative is losing it silently).
+    Default is unbounded, matching the old behavior.
+    """
+
+    def __init__(
+        self,
+        path_or_file: str | IO[str],
+        *,
+        max_bytes: int | None = None,
+        backups: int = 1,
+    ):
+        self.max_bytes = max_bytes
+        self.backups = max(int(backups), 1)
         if isinstance(path_or_file, str):
+            self._path: str | None = path_or_file
             self._f: IO[str] = open(path_or_file, "a")
             self._owns = True
+            try:
+                self._bytes = os.path.getsize(path_or_file)
+            except OSError:
+                self._bytes = 0
         else:
+            self._path = None
             self._f = path_or_file
             self._owns = False
+            self._bytes = 0
         self._lock = threading.Lock()
         self.events_written = 0
+        self.events_dropped = 0
+        self.rotations = 0
+
+    @property
+    def bytes_written(self) -> int:
+        """Bytes in the CURRENT file (resets on rotation)."""
+        return self._bytes
+
+    def _rotate(self) -> None:
+        self._f.close()
+        for i in range(self.backups, 0, -1):
+            src = self._path if i == 1 else f"{self._path}.{i - 1}"
+            dst = f"{self._path}.{i}"
+            if os.path.exists(src):
+                os.replace(src, dst)
+        self._f = open(self._path, "w")
+        self._bytes = 0
+        self.rotations += 1
 
     def emit(self, event: str, **fields) -> None:
         rec = {"event": event, "t": round(time.time(), 6), **fields}
-        line = json.dumps(rec, default=float)
+        line = json.dumps(rec, default=float) + "\n"
         with self._lock:
-            self._f.write(line + "\n")
+            if (
+                self.max_bytes is not None
+                and self._bytes + len(line) > self.max_bytes
+            ):
+                if self._path is None:
+                    self.events_dropped += 1
+                    return
+                self._rotate()
+            self._f.write(line)
             self._f.flush()
+            self._bytes += len(line)
             self.events_written += 1
 
     def close(self) -> None:
@@ -128,9 +180,17 @@ _FIT_LOG_INIT = False
 _FIT_LOCK = threading.Lock()
 
 
+def _default_max_bytes() -> int | None:
+    """Size bound for PATH-based global sinks: 64 MiB per file unless
+    ``REPRO_FIT_LOG_MAX_BYTES`` overrides it (0 = unbounded)."""
+    return int(os.environ.get("REPRO_FIT_LOG_MAX_BYTES", str(64 << 20))) or None
+
+
 def set_fit_log(sink: str | IO[str] | JsonlEventLog | None) -> JsonlEventLog | None:
     """Install (or clear, with ``None``) the process-global fit-telemetry
-    sink.  Returns the active log."""
+    sink.  Returns the active log.  A path string gets the default size
+    bound (see :func:`fit_log`); pass a :class:`JsonlEventLog` to choose
+    your own."""
     global _FIT_LOG, _FIT_LOG_INIT
     with _FIT_LOCK:
         if _FIT_LOG is not None and sink is not _FIT_LOG:
@@ -139,6 +199,8 @@ def set_fit_log(sink: str | IO[str] | JsonlEventLog | None) -> JsonlEventLog | N
             _FIT_LOG = None
         elif isinstance(sink, JsonlEventLog):
             _FIT_LOG = sink
+        elif isinstance(sink, str):
+            _FIT_LOG = JsonlEventLog(sink, max_bytes=_default_max_bytes())
         else:
             _FIT_LOG = JsonlEventLog(sink)
         _FIT_LOG_INIT = True
@@ -147,14 +209,18 @@ def set_fit_log(sink: str | IO[str] | JsonlEventLog | None) -> JsonlEventLog | N
 
 def fit_log() -> JsonlEventLog | None:
     """The active fit-telemetry sink, honoring ``REPRO_FIT_LOG`` on first
-    use; ``None`` when telemetry is off."""
+    use; ``None`` when telemetry is off.  Env-installed sinks are bounded
+    (rotation at ``REPRO_FIT_LOG_MAX_BYTES``, default 64 MiB) so leaving
+    telemetry on for a week cannot fill the disk."""
     global _FIT_LOG_INIT
     if not _FIT_LOG_INIT:
         with _FIT_LOCK:
             if not _FIT_LOG_INIT:
                 path = os.environ.get("REPRO_FIT_LOG")
                 if path:
-                    globals()["_FIT_LOG"] = JsonlEventLog(path)
+                    globals()["_FIT_LOG"] = JsonlEventLog(
+                        path, max_bytes=_default_max_bytes()
+                    )
                 globals()["_FIT_LOG_INIT"] = True
     return _FIT_LOG
 

@@ -13,6 +13,11 @@ Reads a Chrome trace-event JSON written by
 
     python -m repro.obs.report trace.json
     python -m repro.obs.report trace.json --top 5 --fit fit.jsonl
+    python -m repro.obs.report trace.json --format json   # machine-readable
+
+``--format json`` emits the same breakdown as one JSON object (stage
+rows, slowest spans, embedded metrics snapshot, fit summary) so CI and
+controller tests assert on parsed fields instead of scraping text.
 """
 from __future__ import annotations
 
@@ -94,6 +99,59 @@ def summarize_fit(path: str) -> list[str]:
     return lines
 
 
+def fit_summary_dict(path: str) -> dict:
+    """Machine-readable fit-telemetry summary (the JSON analogue of
+    :func:`summarize_fit`)."""
+    counts: collections.Counter[str] = collections.Counter()
+    last: dict[str, dict] = {}
+    eps: list[float] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            event = rec.get("event", "?")
+            counts[event] += 1
+            last[event] = rec
+            if "entries_per_sec" in rec:
+                eps.append(float(rec["entries_per_sec"]))
+    return {
+        "path": path,
+        "counts": dict(counts),
+        "last": last,
+        "mean_entries_per_sec": sum(eps) / len(eps) if eps else None,
+    }
+
+
+def report_dict(doc: dict, top: int) -> dict:
+    """The whole report as one JSON-able object — what ``--format json``
+    prints and what controller tests/CI assert on."""
+    events = doc["traceEvents"]
+    rows = stage_breakdown(events)
+    names = _process_names(events)
+    total = sum(r["total_ms"] for r in rows)
+    return {
+        "spans": sum(r["count"] for r in rows),
+        "total_ms": total,
+        "processes": sorted(names.values()),
+        "stages": rows,
+        "slowest": [
+            {
+                "stage": ev["name"],
+                "instance": names.get(ev.get("pid"), str(ev.get("pid"))),
+                "dur_ms": float(ev.get("dur", 0.0)) / 1e3,
+                "args": {
+                    k: v for k, v in ev.get("args", {}).items()
+                    if k not in ("trace_id", "span_id", "parent_id")
+                },
+            }
+            for ev in slowest_spans(events, top)
+        ],
+        "metrics": doc.get("repro_metrics"),
+    }
+
+
 def render(doc: dict, top: int) -> list[str]:
     events = doc["traceEvents"]
     rows = stage_breakdown(events)
@@ -159,6 +217,8 @@ def main(argv: list[str] | None = None) -> int:
                         help="how many slowest spans to show (default 10)")
     parser.add_argument("--fit", default=None,
                         help="also summarize a fit-telemetry JSONL file")
+    parser.add_argument("--format", choices=("text", "json"), default="text",
+                        help="output format (json = machine-readable)")
     args = parser.parse_args(argv)
 
     try:
@@ -166,6 +226,12 @@ def main(argv: list[str] | None = None) -> int:
     except (OSError, ValueError, json.JSONDecodeError) as e:
         print(f"repro.obs.report: {e}", file=sys.stderr)
         return 1
+    if args.format == "json":
+        out = report_dict(doc, args.top)
+        if args.fit:
+            out["fit"] = fit_summary_dict(args.fit)
+        print(json.dumps(out, indent=2, default=float))
+        return 0
     for line in render(doc, args.top):
         print(line)
     if args.fit:

@@ -48,6 +48,20 @@ payload) are rejected at ``submit`` time so they can never poison a
 coalesced batch; if a decode still fails at flush, only that payload's
 tickets land in ``failed`` — every other queued request completes.
 
+ONLINE FITNESS CANARIES (``canary_fraction > 0``): containers whose
+footer carries a ``TCDQ`` held-out block (ground-truth original-tensor
+entries recorded at fit time) are spot-checked on the serve path — a
+deterministic, seeded fraction of ``decode_at`` calls re-decodes a
+bounded sample of the held-out indices and scores fitness
+``1 - ||truth - approx|| / ||truth||`` (the paper's §4.2 metric), feeding
+a per-payload rolling gauge in ``self.metrics`` and, below
+``canary_min_fitness``, a ``quality_breach`` event naming the chunk that
+routes the worst entry.  Served ANSWERS are bit-identical with canaries
+on or off — the check is a side decode through the same batched funnel,
+never a rewrite of the response; only stats differ.  Payloads without a
+``TCDQ`` block (all legacy files) and versioned payloads skip canaries
+cleanly.
+
     svc = CodecService(cache_bytes=1 << 28)
     svc.load_stream("embed", "embed.tcdc")      # mmap + chunk index only
     svc.decode_at("embed", idx)                 # materializes on demand
@@ -58,6 +72,7 @@ import collections
 import concurrent.futures
 import contextlib
 import dataclasses
+import zlib
 from typing import Callable
 
 import numpy as np
@@ -175,6 +190,30 @@ class Ownership:
 
 
 @dataclasses.dataclass
+class _CanaryState:
+    """Per-payload canary bookkeeping: check/breach counts plus a bounded
+    window of recent fitness scores for the rolling gauge."""
+
+    checks: int = 0
+    breaches: int = 0
+    last_fitness: float | None = None
+    window: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=32)
+    )
+
+    def rolling_fitness(self) -> float | None:
+        return sum(self.window) / len(self.window) if self.window else None
+
+    def as_dict(self) -> dict:
+        return {
+            "checks": self.checks,
+            "breaches": self.breaches,
+            "last_fitness": self.last_fitness,
+            "rolling_fitness": self.rolling_fitness(),
+        }
+
+
+@dataclasses.dataclass
 class _CacheEntry:
     nbytes: int
     value: np.ndarray | None  # decode tiles live here; payloads evict via fn
@@ -199,6 +238,9 @@ class _StreamPayload:
     #: geometry learned from the first materialized component
     shape: tuple[int, ...] | None = None
     n_tiles: int | None = None
+    #: held-out ground truth from the container's TCDQ block; None for
+    #: legacy files — those simply never canary
+    heldout: container.HeldoutEntries | None = None
     #: in-flight background warm (prefetch): joined by _get before use
     warm: concurrent.futures.Future | None = None
     #: True after a background warm materialized the body: the NEXT counted
@@ -214,8 +256,28 @@ class CodecService:
         max_batch: int = 65536,
         cache_bytes: int | None = None,
         prefetch: bool = False,
+        canary_fraction: float = 0.0,
+        canary_seed: int = 0,
+        canary_min_fitness: float | None = None,
+        canary_max_entries: int = 256,
     ):
         self.max_batch = max_batch
+        #: fraction of decode_at calls (per payload, deterministic in the
+        #: call sequence) that run an online fitness canary; 0 = off
+        if not 0.0 <= canary_fraction <= 1.0:
+            raise ValueError(
+                f"canary_fraction must be in [0, 1], got {canary_fraction}"
+            )
+        self.canary_fraction = float(canary_fraction)
+        self.canary_seed = int(canary_seed)
+        self.canary_min_fitness = canary_min_fitness
+        self.canary_max_entries = int(canary_max_entries)
+        #: per-payload canary call counter (sampling position) and state
+        self._canary_calls: dict[str, int] = {}
+        self._canary: dict[str, _CanaryState] = {}
+        #: instrument registry (canary gauges today; service-local so two
+        #: services in one process never share a gauge)
+        self.metrics = obs.MetricsRegistry()
         #: byte budget for droppable decode state; None = unbounded (legacy)
         self.cache_bytes = cache_bytes
         #: overlap I/O with compute on a single background thread:
@@ -277,7 +339,7 @@ class CodecService:
         body_nbytes = sum(c.length for c in chunks)
         sp = _StreamPayload(
             path, codec_name, chunks, view, tile_entries, body_nbytes,
-            versions=oc.versions,
+            versions=oc.versions, heldout=oc.heldout,
         )
         self._streams[name] = sp
         self._info[name] = PayloadInfo(
@@ -843,11 +905,101 @@ class CodecService:
                     # (which reports 0 tiles decoded for an empty query)
                     calls = -(-idx.shape[0] // self.max_batch)
                 self._account_decode_state(name, enc)
+                if self.canary_fraction and sp is not None:
+                    self._maybe_canary(name, sp, enc)
             info = self._info[name]
             info.requests += 1
             info.entries_decoded += idx.shape[0]
             info.decode_calls += calls
             return out
+
+    # -------------------------------------------------------------- canaries
+    def _maybe_canary(
+        self, name: str, sp: _StreamPayload, enc: codecs.Encoded
+    ) -> None:
+        """Maybe run one online fitness check after a served decode.
+
+        The sampling decision hashes (seed, payload, per-payload call
+        number) so it is DETERMINISTIC in the request sequence — two
+        instances serving the same stream canary the same calls, and a
+        Local vs Socket transport cannot diverge.  The check decodes
+        through :meth:`_decode_batched` (a pure read), so served answers
+        are untouched; only stats move.
+        """
+        if sp.heldout is None:
+            return
+        k = self._canary_calls.get(name, 0)
+        self._canary_calls[name] = k + 1
+        h = zlib.crc32(f"{self.canary_seed}:{name}:{k}".encode())
+        if h >= self.canary_fraction * 2**32:
+            return
+        idx, truth = sp.heldout.indices, sp.heldout.values
+        if len(idx) > self.canary_max_entries:
+            pick = np.random.default_rng((self.canary_seed, k)).choice(
+                len(idx), size=self.canary_max_entries, replace=False
+            )
+            idx, truth = idx[pick], truth[pick]
+        with obs.span("canary", payload=name, entries=len(idx)):
+            pos = flat_to_multi(idx, tuple(int(s) for s in enc.shape))
+            approx = np.asarray(self._decode_batched(enc, pos), np.float64)
+        err = approx - truth
+        fitness = float(
+            1.0 - np.linalg.norm(err) / max(np.linalg.norm(truth), 1e-30)
+        )
+        st = self._canary.setdefault(name, _CanaryState())
+        st.checks += 1
+        st.last_fitness = fitness
+        st.window.append(fitness)
+        self.metrics.gauge("canary_fitness", payload=name).set(
+            st.rolling_fitness()
+        )
+        self.metrics.counter("canary_checks", payload=name).inc()
+        if (
+            self.canary_min_fitness is not None
+            and fitness < self.canary_min_fitness
+        ):
+            st.breaches += 1
+            self.metrics.counter("canary_breaches", payload=name).inc()
+            worst = int(idx[int(np.argmax(np.abs(err)))])
+            chunk, lo, hi = self._chunk_of_entry(sp, worst)
+            obs.emit_event(
+                "quality_breach",
+                payload=name,
+                fitness=fitness,
+                threshold=float(self.canary_min_fitness),
+                worst_index=worst,
+                chunk=chunk,
+                entry_start=lo,
+                entry_stop=hi,
+            )
+
+    @staticmethod
+    def _chunk_of_entry(
+        sp: _StreamPayload, flat: int
+    ) -> tuple[int | None, int | None, int | None]:
+        """The chunk whose footer entry range routes ``flat`` — names the
+        repair target for a quality breach.  (None, None, None) when the
+        file carries no entry ranges."""
+        for i, c in enumerate(sp.chunks):
+            if (
+                c.entry_start is not None
+                and c.entry_start <= flat < c.entry_stop
+            ):
+                return i, int(c.entry_start), int(c.entry_stop)
+        return None, None, None
+
+    def canary_stats(self) -> dict:
+        """Per-payload canary snapshot (checks/breaches/fitness); empty
+        until a canary has actually run."""
+        return {name: st.as_dict() for name, st in self._canary.items()}
+
+    def stats(self) -> dict:
+        """Full JSON-able instance snapshot: the cache-stats wire schema
+        plus a ``canary`` sub-dict.  Additive over ``cache_stats.as_dict``
+        so old consumers of the transport stats blob keep working."""
+        out = self.cache_stats.as_dict()
+        out["canary"] = self.canary_stats()
+        return out
 
     # --------------------------------------------------------------- batched
     def submit(

@@ -31,7 +31,7 @@ from repro.stream.source import (
     SyntheticTensorSource,
     write_tensor_file,
 )
-from repro.stream.writer import ChunkedWriter, write_chunked
+from repro.stream.writer import ChunkedWriter, sample_heldout, write_chunked
 
 __all__ = [
     "ChunkedWriter",
@@ -43,6 +43,7 @@ __all__ = [
     "SyntheticTensorSource",
     "TTICEStreamFitter",
     "fit_stream",
+    "sample_heldout",
     "write_chunked",
     "write_tensor_file",
 ]

@@ -23,6 +23,14 @@ Two modes:
   the writer stays open — the next ``append`` truncates that footer and
   keeps going, so a crash mid-version loses only the unsynced tail.
   ``repro.temporal.VersionedStore`` builds on this.
+
+Either mode can additionally record HELD-OUT ground truth for the serve
+layer's online fitness canaries: ``record_heldout(flat_indices, values)``
+accumulates exact original-tensor entries that every sync/close folds
+into the footer's optional ``TCDQ`` block.  ``write_chunked`` takes the
+same sample via ``heldout=``; files written without one parse exactly as
+before (the block is optional), so old readers and old files both keep
+working.
 """
 from __future__ import annotations
 
@@ -41,6 +49,8 @@ class ChunkedWriter:
         self.delta = delta
         self._chunks: list[container.ChunkEntry] = []
         self._versions: list[container.VersionEntry] | None = [] if delta else None
+        self._heldout_idx: list[np.ndarray] = []
+        self._heldout_vals: list[np.ndarray] = []
         self._open_base: int | None = None
         self._open_start = 0
         flags = container.FLAG_CHUNKED | (container.FLAG_DELTA if delta else 0)
@@ -123,6 +133,41 @@ class ChunkedWriter:
         self._offset += len(chunk)
         return len(self._chunks) - 1
 
+    def record_heldout(
+        self, flat_indices: np.ndarray, values: np.ndarray
+    ) -> int:
+        """Accumulate held-out ground-truth entries (flat index + exact
+        original value) for the footer's ``TCDQ`` block; returns the total
+        recorded so far.  Call any time before close — typically at fit
+        time, when the original values are still in hand.  Re-sealing
+        (``sync``) folds everything recorded so far into the footer."""
+        if self._closed:
+            raise ValueError(f"{self.path}: writer already closed")
+        idx = np.asarray(flat_indices, dtype=np.int64).reshape(-1)
+        vals = np.asarray(values, dtype=np.float64).reshape(-1)
+        if len(idx) != len(vals):
+            raise ValueError(
+                f"held-out indices/values length mismatch: {len(idx)} != {len(vals)}"
+            )
+        if len(idx):
+            if int(idx.min()) < 0:
+                raise ValueError("held-out flat indices must be non-negative")
+            self._heldout_idx.append(idx)
+            self._heldout_vals.append(vals)
+            self._unseal()  # a synced footer no longer reflects the sample
+        return self.heldout_recorded
+
+    @property
+    def heldout_recorded(self) -> int:
+        return sum(len(a) for a in self._heldout_idx)
+
+    def _heldout(self) -> container.HeldoutEntries | None:
+        if not self._heldout_idx:
+            return None
+        return container.HeldoutEntries(
+            np.concatenate(self._heldout_idx), np.concatenate(self._heldout_vals)
+        )
+
     def _unseal(self) -> None:
         """Drop a footer written by an earlier ``sync`` so appends resume
         at the data end; the next sync/close writes a fresh footer."""
@@ -154,7 +199,9 @@ class ChunkedWriter:
             if not self._versions:
                 raise ValueError(f"{self.path}: no versions to sync")
         if not self._sealed:
-            self._f.write(container.pack_footer(self._chunks, self._versions))
+            self._f.write(
+                container.pack_footer(self._chunks, self._versions, self._heldout())
+            )
             self._f.flush()
             self._sealed = True
         return self._f.tell()
@@ -170,7 +217,9 @@ class ChunkedWriter:
                     f"{self.path}: delta file needs at least one version"
                 )
         if not self._sealed:
-            self._f.write(container.pack_footer(self._chunks, self._versions))
+            self._f.write(
+                container.pack_footer(self._chunks, self._versions, self._heldout())
+            )
         self._offset = self._f.tell()
         self._f.close()
         self._closed = True
@@ -187,13 +236,24 @@ class ChunkedWriter:
             self._closed = True
 
 
-def write_chunked(path: str, enc: Encoded, chunk_bytes: int = 1 << 20) -> int:
+def write_chunked(
+    path: str,
+    enc: Encoded,
+    chunk_bytes: int = 1 << 20,
+    heldout: tuple[np.ndarray, np.ndarray] | None = None,
+) -> int:
     """Write a finished payload as a chunked v3 file; returns file bytes.
 
     Each byte chunk is stamped with an equal slice of the tensor's flat
     entry space (chunk i of n routes entries ``[i*E/n, (i+1)*E/n)``) so a
     fleet router can shard query ownership chunk-by-chunk without any
     knowledge of the codec's body layout.
+
+    ``heldout=(flat_indices, values)`` records ground-truth ORIGINAL
+    tensor entries into the footer's ``TCDQ`` block so the serve layer
+    can run online fitness canaries against this file.  The values must
+    come from the source tensor, not the codec's own decode — comparing
+    a codec against itself would report perfect fitness forever.
     """
     if chunk_bytes <= 0:
         raise ValueError(f"chunk_bytes must be positive, got {chunk_bytes}")
@@ -203,6 +263,14 @@ def write_chunked(path: str, enc: Encoded, chunk_bytes: int = 1 << 20) -> int:
     n_entries = int(np.prod(enc.shape))
     n_chunks = -(-len(body) // chunk_bytes)
     with ChunkedWriter(path, enc.codec_name) as w:
+        if heldout is not None:
+            idx = np.asarray(heldout[0], dtype=np.int64).reshape(-1)
+            if len(idx) and int(idx.max()) >= n_entries:
+                raise ValueError(
+                    f"held-out flat index {int(idx.max())} out of range "
+                    f"[0, {n_entries})"
+                )
+            w.record_heldout(idx, heldout[1])
         for i, off in enumerate(range(0, len(body), chunk_bytes)):
             lo = i * n_entries // n_chunks
             hi = (i + 1) * n_entries // n_chunks
@@ -211,3 +279,16 @@ def write_chunked(path: str, enc: Encoded, chunk_bytes: int = 1 << 20) -> int:
                 entry_range=(lo, hi) if hi > lo else None,
             )
         return w.close()
+
+
+def sample_heldout(
+    x: np.ndarray, n: int = 256, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Deterministic held-out sample of a dense source tensor: ``n``
+    distinct flat indices (sorted) and their exact values, ready for
+    ``write_chunked(..., heldout=...)`` / ``record_heldout``."""
+    flat = np.asarray(x).reshape(-1)
+    n = min(int(n), flat.size)
+    rng = np.random.default_rng(seed)
+    idx = np.sort(rng.choice(flat.size, size=n, replace=False)).astype(np.int64)
+    return idx, flat[idx].astype(np.float64)

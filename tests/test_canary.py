@@ -1,0 +1,245 @@
+"""Online fitness canaries: the TCDQ held-out footer block (write/parse/
+corruption), CodecService canary sampling (deterministic, breach events
+naming the offending chunk), and the serving contract — answers are
+bit-identical with canaries off or on, across Local and Socket fleets,
+and legacy files without the block serve unchanged."""
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.codecs import container, get_codec
+from repro.fleet import FleetFrontend, SocketTransport, collect
+from repro.serve.codec_service import CodecService
+from repro.stream import ChunkedWriter, sample_heldout, write_chunked
+
+SHAPE = (16, 12, 8)
+
+
+@pytest.fixture(scope="module")
+def source():
+    rng = np.random.default_rng(7)
+    x = rng.random(SHAPE).astype(np.float32)
+    return x, get_codec("ttd").fit(x, max_rank=4)
+
+
+@pytest.fixture(scope="module")
+def canary_path(source, tmp_path_factory):
+    x, enc = source
+    path = str(tmp_path_factory.mktemp("canary") / "p.tcdc")
+    write_chunked(path, enc, chunk_bytes=1024,
+                  heldout=sample_heldout(x, 64, seed=3))
+    return path
+
+
+@pytest.fixture(scope="module")
+def legacy_path(source, tmp_path_factory):
+    _, enc = source
+    path = str(tmp_path_factory.mktemp("canary") / "legacy.tcdc")
+    write_chunked(path, enc, chunk_bytes=1024)
+    return path
+
+
+def _idx(n=64, seed=1):
+    rng = np.random.default_rng(seed)
+    return np.stack([rng.integers(0, s, n) for s in SHAPE], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# TCDQ container block
+# ---------------------------------------------------------------------------
+def test_heldout_round_trips_bit_exact(source, canary_path):
+    x, _ = source
+    idx, vals = sample_heldout(x, 64, seed=3)
+    oc = container.open_container(canary_path)
+    try:
+        assert oc.heldout is not None and len(oc.heldout) == 64
+        assert np.array_equal(oc.heldout.indices, idx)
+        assert np.array_equal(oc.heldout.values, vals)  # float64, exact
+    finally:
+        oc.close()
+
+
+def test_legacy_file_has_no_heldout_and_loads(source, legacy_path):
+    _, enc = source
+    oc = container.open_container(legacy_path)
+    try:
+        assert oc.heldout is None
+    finally:
+        oc.close()
+    assert np.array_equal(container.load_file(legacy_path).to_dense(),
+                          enc.to_dense())
+
+
+def test_record_heldout_unseals_synced_footer(source, tmp_path):
+    x, enc = source
+    idx, vals = sample_heldout(x, 10, seed=0)
+    path = str(tmp_path / "w.tcdc")
+    w = ChunkedWriter(path, "ttd")
+    w.append(enc.to_bytes())
+    w.record_heldout(idx[:4], vals[:4])
+    w.sync()  # footer now holds 4 entries
+    w.record_heldout(idx[4:], vals[4:])  # must unseal + rewrite
+    w.close()
+    oc = container.open_container(path)
+    try:
+        assert len(oc.heldout) == 10
+        assert np.array_equal(oc.heldout.indices, idx)
+    finally:
+        oc.close()
+
+
+def test_record_heldout_rejects_bad_input(tmp_path, source):
+    _, enc = source
+    w = ChunkedWriter(str(tmp_path / "w.tcdc"), "ttd")
+    with pytest.raises(ValueError, match="length mismatch"):
+        w.record_heldout(np.array([1, 2]), np.array([0.5]))
+    with pytest.raises(ValueError, match="non-negative"):
+        w.record_heldout(np.array([-1]), np.array([0.5]))
+    with pytest.raises(ValueError, match="out of range"):
+        write_chunked(
+            str(tmp_path / "x.tcdc"), enc,
+            heldout=(np.array([10**9]), np.array([0.5])),
+        )
+
+
+def test_corrupt_heldout_block_is_rejected(canary_path, tmp_path):
+    blob = open(canary_path, "rb").read()
+    # truncate mid-footer: drop the last 8 bytes of the TCDQ payload
+    # (before the u64 footer_len + TCDX trailer, which must stay intact)
+    foot_len = int.from_bytes(blob[-12:-4], "little")
+    cut = bytearray(blob)
+    del cut[len(blob) - 12 - 8 : len(blob) - 12]
+    cut[-12:-4] = (foot_len - 8).to_bytes(8, "little")
+    bad = tmp_path / "trunc.tcdc"
+    bad.write_bytes(bytes(cut))
+    with pytest.raises(ValueError, match="corrupt|truncated"):
+        container.open_container(str(bad)).close()
+
+
+def test_sample_heldout_is_deterministic_and_sorted(source):
+    x, _ = source
+    a = sample_heldout(x, 32, seed=5)
+    b = sample_heldout(x, 32, seed=5)
+    assert np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
+    assert np.all(np.diff(a[0]) > 0)  # sorted, distinct
+    assert np.array_equal(a[1], x.reshape(-1)[a[0]].astype(np.float64))
+
+
+# ---------------------------------------------------------------------------
+# CodecService canary sampling
+# ---------------------------------------------------------------------------
+def test_canary_checks_update_gauge_and_stats(canary_path):
+    svc = CodecService(canary_fraction=1.0)
+    svc.load_stream("e", canary_path)
+    for seed in range(3):
+        svc.decode_at("e", _idx(seed=seed))
+    cs = svc.canary_stats()["e"]
+    assert cs["checks"] == 3 and cs["breaches"] == 0
+    assert 0.0 < cs["last_fitness"] <= 1.0
+    assert cs["rolling_fitness"] == pytest.approx(cs["last_fitness"])
+    gauges = {
+        (g["name"], g["labels"].get("payload")): g["value"]
+        for g in svc.metrics.as_dict()["gauges"]
+    }
+    assert gauges[("canary_fitness", "e")] == pytest.approx(cs["rolling_fitness"])
+    assert svc.stats()["canary"]["e"] == cs  # rides the wire stats schema
+
+
+def test_canary_sampling_is_deterministic_in_call_sequence(canary_path):
+    a = CodecService(canary_fraction=0.5)
+    b = CodecService(canary_fraction=0.5)
+    for svc in (a, b):
+        svc.load_stream("e", canary_path)
+        for seed in range(20):
+            svc.decode_at("e", _idx(8, seed=seed))
+    assert a.canary_stats() == b.canary_stats()
+    checks = a.canary_stats()["e"]["checks"]
+    assert 0 < checks < 20  # a fraction, not all-or-nothing
+
+
+def test_quality_breach_event_names_offending_chunk(canary_path):
+    obs.clear_events()
+    svc = CodecService(canary_fraction=1.0, canary_min_fitness=0.999999)
+    svc.load_stream("e", canary_path)
+    svc.decode_at("e", _idx())
+    assert svc.canary_stats()["e"]["breaches"] == 1
+    evs = obs.events("quality_breach")
+    assert len(evs) == 1
+    ev = evs[0]
+    assert ev["payload"] == "e" and ev["fitness"] < 0.999999
+    assert ev["entry_start"] <= ev["worst_index"] < ev["entry_stop"]
+    oc = container.open_container(canary_path)
+    try:
+        c = oc.chunks[ev["chunk"]]
+        assert (c.entry_start, c.entry_stop) == (ev["entry_start"], ev["entry_stop"])
+    finally:
+        oc.close()
+
+
+def test_canary_skips_legacy_payloads_cleanly(legacy_path):
+    svc = CodecService(canary_fraction=1.0, canary_min_fitness=0.99)
+    svc.load_stream("l", legacy_path)
+    svc.decode_at("l", _idx())
+    assert svc.canary_stats() == {}
+
+
+def test_canary_rejects_bad_fraction():
+    with pytest.raises(ValueError, match="canary_fraction"):
+        CodecService(canary_fraction=1.5)
+
+
+# ---------------------------------------------------------------------------
+# serving contract: answers bit-identical off/on, Local and Socket
+# ---------------------------------------------------------------------------
+def _drill(fleet):
+    out = []
+    try:
+        fleet.load_stream("e", fleet._canary_test_path, tile_entries=256)
+        for seed in range(6):
+            out.append(fleet.decode_at("e", _idx(seed=seed)))
+        assert not fleet.failed
+        return out
+    finally:
+        fleet.close()
+
+
+def test_local_fleet_answers_bit_identical_with_canaries(canary_path):
+    answers = {}
+    for frac in (0.0, 1.0):
+        fleet = FleetFrontend(
+            2, cache_bytes=1 << 22, canary_fraction=frac,
+            canary_min_fitness=0.999999 if frac else None,
+        )
+        fleet._canary_test_path = canary_path
+        answers[frac] = _drill(fleet)
+    for off, on in zip(answers[0.0], answers[1.0]):
+        assert off.dtype == on.dtype
+        assert np.array_equal(off, on)
+
+
+def test_socket_fleet_answers_bit_identical_with_canaries(canary_path):
+    answers, stats = {}, None
+    for frac in (0.0, 1.0):
+        fleet = FleetFrontend(
+            ["w0", "w1"],
+            transport_factory=lambda iid, frac=frac: SocketTransport.spawn(
+                iid, timeout=10.0, canary_fraction=frac,
+                canary_min_fitness=0.999999 if frac else None,
+            ),
+        )
+        fleet._canary_test_path = canary_path
+        try:
+            fleet.load_stream("e", canary_path, tile_entries=256)
+            answers[frac] = [
+                fleet.decode_at("e", _idx(seed=seed)) for seed in range(6)
+            ]
+            assert not fleet.failed
+            if frac:  # canary stats cross the wire in the stats blob
+                stats = collect(fleet)
+        finally:
+            fleet.close()
+    for off, on in zip(answers[0.0], answers[1.0]):
+        assert np.array_equal(off, on)
+    assert stats.canary["e"]["checks"] > 0
+    assert stats.canary["e"]["breaches"] == stats.canary["e"]["checks"]
+    assert any(m.canary for m in stats.instances.values())

@@ -1,0 +1,250 @@
+"""Controller decision logic over recorded metric fixtures (pure
+ScalingPolicy drills: sustained-breach scale-up, hysteresis hold, idle
+scale-down, flap guard), the metrics roll-up fields the policy consumes
+(monotonic ``collected_at``, cumulative ``excluded_total``), and a
+FleetController integration pass driving real ``rebalance`` calls."""
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.codecs import get_codec
+from repro.fleet import (
+    ControllerConfig,
+    FleetController,
+    FleetFrontend,
+    ScalingPolicy,
+    TransportError,
+    collect,
+    rebalance,
+)
+from repro.stream import write_chunked
+
+CFG = ControllerConfig(
+    p99_target_ms=5.0, p99_clear_ms=4.0,
+    breach_evals=3, clear_evals=2,
+    idle_flushes_per_eval=1.0, idle_evals=3, cooldown_evals=2,
+    min_instances=1, max_instances=4,
+)
+
+
+def _sample(p99, flushes, instances=2, **extra):
+    return {"decode_p99_ms": p99, "flushes_total": flushes,
+            "instances": instances, **extra}
+
+
+def _drill(policy, rows):
+    return [policy.observe(s, now=float(t)).action for t, s in enumerate(rows)]
+
+
+# ---------------------------------------------------------------------------
+# recorded-fixture policy drills
+# ---------------------------------------------------------------------------
+def test_scale_up_on_sustained_breach_exactly_at_threshold():
+    # breach_evals=3: two violating evals hold, the third scales up
+    rows = [_sample(9.0, 10 * (t + 1)) for t in range(5)]
+    actions = _drill(ScalingPolicy(CFG), rows)
+    assert actions == ["hold", "hold", "scale_up", "hold", "hold"]  # cooldown=2
+
+
+def test_spike_resets_the_breach_streak():
+    p = ScalingPolicy(CFG)
+    rows = [
+        _sample(9.0, 10), _sample(9.0, 20),
+        _sample(3.0, 30),                      # clears -> streak resets
+        _sample(9.0, 40), _sample(9.0, 50), _sample(9.0, 60),
+    ]
+    assert _drill(p, rows) == [
+        "hold", "hold", "hold", "hold", "hold", "scale_up",
+    ]
+
+
+def test_hold_inside_hysteresis_band():
+    # values in (clear=4, target=5] never accumulate a breach streak
+    rows = [_sample(v, 10 * (t + 1))
+            for t, v in enumerate([4.5, 4.9, 4.2, 4.8, 4.6, 4.9, 4.4, 4.7])]
+    assert _drill(ScalingPolicy(CFG), rows) == ["hold"] * 8
+
+
+def test_scale_down_on_idle_and_min_floor():
+    p = ScalingPolicy(CFG)
+    rows = [_sample(2.0, 100)] + [_sample(2.0, 100)] * 3  # flushes frozen
+    # first eval sets the baseline; idle_evals=3 later we scale down
+    assert _drill(p, rows) == ["hold", "hold", "hold", "scale_down"]
+    # at the floor the same signal holds forever
+    floor = [_sample(2.0, 100, instances=1)] * 8
+    assert _drill(ScalingPolicy(CFG), floor)[1:] == ["hold"] * 7
+
+
+def test_stale_latency_cannot_pin_a_breach_while_idle():
+    p = ScalingPolicy(CFG)
+    # live traffic opens a breach...
+    _drill(p, [_sample(9.0, 10 * (t + 1)) for t in range(3)])
+    # ...then traffic stops but the window percentile stays frozen at 9ms.
+    # The policy blanks the stale latency: no further scale_up, and the
+    # idle streak wins through to scale_down.
+    rows = [_sample(9.0, 30)] * 6
+    actions = _drill(p, rows)
+    assert "scale_up" not in actions
+    assert "scale_down" in actions
+
+
+def test_flap_guard_no_oscillation_on_noisy_signal():
+    # noisy alternation around the target with live traffic: breach
+    # streaks never reach 3, idle streaks never reach 3, and any action
+    # is followed by >= cooldown_evals holds
+    rng = np.random.default_rng(0)
+    p = ScalingPolicy(CFG)
+    actions = []
+    flushes = 0
+    for t in range(60):
+        flushes += int(rng.integers(1, 5))
+        v = float(rng.choice([3.0, 4.5, 6.0]))
+        actions.append(p.observe(_sample(v, flushes), now=float(t)).action)
+    changes = [a for a in actions if a != "hold"]
+    for i, a in enumerate(actions):
+        if a != "hold":
+            assert actions[i + 1: i + 1 + CFG.cooldown_evals] == (
+                ["hold"] * min(CFG.cooldown_evals, len(actions) - i - 1)
+            )
+    # no add/remove ping-pong: never a scale_down right after a scale_up
+    for prev, cur in zip(changes, changes[1:]):
+        assert not (prev == "scale_up" and cur == "scale_down")
+
+
+def test_max_instances_caps_scale_up():
+    p = ScalingPolicy(CFG)
+    rows = [_sample(9.0, 10 * (t + 1), instances=4) for t in range(6)]
+    actions = _drill(p, rows)
+    assert "scale_up" not in actions
+    d = p.observe(_sample(9.0, 999, instances=4), now=9.0)
+    assert d.action == "hold" and "max_instances" in d.reason
+
+
+def test_quality_objective_surfaces_events_without_scaling():
+    cfg = ControllerConfig(p99_target_ms=5.0, min_fitness=0.9,
+                           breach_evals=1, clear_evals=1)
+    p = ScalingPolicy(cfg)
+    d = p.observe(_sample(1.0, 10, **{"canary_fitness.e": 0.5}), now=0.0)
+    assert d.action == "hold"
+    assert [(e.kind, e.slo, e.metric) for e in d.events] == [
+        ("breach_start", "quality", "canary_fitness.e")
+    ]
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="p99_target_ms"):
+        ControllerConfig(p99_target_ms=0.0)
+    with pytest.raises(ValueError, match="min_instances"):
+        ControllerConfig(p99_target_ms=1.0, min_instances=5, max_instances=2)
+    assert ControllerConfig(p99_target_ms=10.0).clear_ms == pytest.approx(8.0)
+
+
+# ---------------------------------------------------------------------------
+# metrics roll-up fields the policy consumes
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def payload(tmp_path):
+    x = np.random.default_rng(0).random((16, 16, 8)).astype(np.float32)
+    enc = get_codec("ttd").fit(x, max_rank=4)
+    path = str(tmp_path / "p.tcdc")
+    write_chunked(path, enc, chunk_bytes=1024)
+    return path
+
+
+def _query(n=50, seed=1):
+    rng = np.random.default_rng(seed)
+    return np.stack([rng.integers(0, s, n) for s in (16, 16, 8)], axis=1)
+
+
+def test_collect_collected_at_monotonic_and_excluded_total(payload):
+    fleet = FleetFrontend(3, cache_bytes=1 << 22)
+    try:
+        fleet.load_stream("e", payload, tile_entries=256)
+        fleet.decode_at("e", _query())
+        m1 = collect(fleet)
+        assert m1.excluded_total == 0 and m1.collected_at > 0
+        assert m1.decode_p99_ms is None or m1.decode_p99_ms >= 0
+        # kill one member's stats path -> excluded on next collect
+        victim = sorted(fleet.transports)[-1]
+
+        def boom(*a, **kw):
+            raise TransportError("stats down")
+
+        fleet.transports[victim].stats = boom
+        m2 = collect(fleet)
+        assert victim in m2.excluded and m2.excluded_total == 1
+        assert m2.collected_at > m1.collected_at
+        # retiring the dead member clears `excluded` but the cumulative
+        # counter keeps the history
+        rebalance(fleet, remove=[victim], warm=False)
+        m3 = collect(fleet)
+        assert m3.excluded == [] and m3.excluded_total == 1
+        assert m3.collected_at > m2.collected_at
+    finally:
+        fleet.close()
+
+
+# ---------------------------------------------------------------------------
+# FleetController integration: recorded samples -> real rebalance
+# ---------------------------------------------------------------------------
+def test_controller_steps_drive_real_rebalance(payload):
+    fleet = FleetFrontend(2, cache_bytes=1 << 22)
+    cfg = ControllerConfig(
+        p99_target_ms=5.0, breach_evals=2, clear_evals=1,
+        idle_evals=2, cooldown_evals=1, min_instances=2, max_instances=3,
+    )
+    ctl = FleetController(fleet, cfg)
+    try:
+        fleet.load_stream("e", payload, tile_entries=256)
+        before = fleet.decode_at("e", _query())
+        obs.clear_events()
+        # sustained breach with live traffic -> admit standby s0
+        ctl.step(_sample(9.0, 10, instances=2))
+        d = ctl.step(_sample(9.0, 20, instances=2))
+        assert d.action == "scale_up"
+        assert "s0" in fleet.transports and len(fleet.transports) == 3
+        assert ctl.admitted == ["s0"]
+        # answers still bit-identical after the ring change
+        assert np.array_equal(fleet.decode_at("e", _query()), before)
+        ctl.step(_sample(3.0, 30, instances=3))     # cooldown tick
+        ctl.step(_sample(3.0, 40, instances=3))     # baseline refresh
+        ctl.step(_sample(3.0, 40, instances=3))     # idle 1
+        d = ctl.step(_sample(3.0, 40, instances=3))  # idle 2 -> retire s0
+        assert d.action == "scale_down"
+        assert "s0" not in fleet.transports and ctl.admitted == []
+        assert np.array_equal(fleet.decode_at("e", _query()), before)
+        assert not fleet.failed
+        acts = [e["action"] for e in obs.events("controller_decision")]
+        assert acts.count("scale_up") == 1 and acts.count("scale_down") == 1
+        assert [d2.action for d2 in ctl.decisions] == acts
+    finally:
+        fleet.close()
+
+
+def test_controller_sample_comes_from_collect(payload):
+    fleet = FleetFrontend(2, cache_bytes=1 << 22)
+    try:
+        fleet.load_stream("e", payload, tile_entries=256)
+        fleet.decode_at("e", _query())
+        ctl = FleetController(fleet, ControllerConfig(p99_target_ms=1e9))
+        s = ctl.sample()
+        assert s["instances"] == 2 and s["flushes_total"] >= 1
+        assert ctl.step().action == "hold"
+    finally:
+        fleet.close()
+
+
+def test_controller_victim_prefers_dead_then_lifo(payload):
+    fleet = FleetFrontend(2, cache_bytes=1 << 22)
+    cfg = ControllerConfig(p99_target_ms=5.0, min_instances=1, max_instances=4)
+    ctl = FleetController(fleet, cfg)
+    try:
+        fleet.load_stream("e", payload, tile_entries=256)
+        rebalance(fleet, add=["s0"])
+        ctl.admitted.append("s0")
+        assert ctl._victim() == "s0"          # LIFO: newest admitted first
+        victim = sorted(fleet.transports)[0]
+        fleet.exclude(victim, TransportError("dead"))
+        assert ctl._victim() == victim        # dead member outranks LIFO
+    finally:
+        fleet.close()

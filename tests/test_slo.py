@@ -1,0 +1,260 @@
+"""SLO engine semantics (streaks, hysteresis, wildcards, burn rate),
+Prometheus text exposition + the scrape server, bounded fit-log rotation,
+the events buffer, and ``obs.report --format json``."""
+import io
+import json
+import urllib.request
+
+import pytest
+
+from repro import obs
+from repro.obs import report, serve_metrics
+from repro.obs.exposition import render_exposition
+from repro.obs.serve_metrics import MetricsServer
+from repro.obs.slo import SLOEngine, SLOSpec, fleet_slo_sample
+
+
+def _eval_seq(engine, key, values):
+    out = []
+    for t, v in enumerate(values):
+        out.append(engine.evaluate({key: v}, now=float(t)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SLO engine
+# ---------------------------------------------------------------------------
+def test_breach_opens_on_exactly_the_nth_consecutive_violation():
+    eng = SLOEngine([SLOSpec("lat", "p99", target=5.0, breach_for=3)])
+    evs = _eval_seq(eng, "p99", [6.0, 6.0, 4.0, 6.0, 6.0, 6.0, 6.0])
+    # the 4.0 resets the streak; breach fires on the 3rd of the new run
+    assert [len(e) for e in evs] == [0, 0, 0, 0, 0, 1, 0]
+    ev = evs[5][0]
+    assert ev.kind == "breach_start" and ev.metric == "p99" and ev.at == 5.0
+    assert eng.is_breached("lat") and eng.breached() == [("lat", "p99")]
+
+
+def test_hysteresis_band_holds_state_and_resets_streaks():
+    eng = SLOEngine([
+        SLOSpec("lat", "p99", target=5.0, clear=4.0, breach_for=2, clear_for=2)
+    ])
+    _eval_seq(eng, "p99", [6.0, 6.0])  # breach opens
+    assert eng.is_breached("lat")
+    # in-band values (4 < v <= 5) hold the breach forever
+    _eval_seq(eng, "p99", [4.5, 4.8, 4.2, 4.9])
+    assert eng.is_breached("lat")
+    # one clearing eval is not enough; a band value resets the good streak
+    evs = _eval_seq(eng, "p99", [3.0, 4.5, 3.0, 3.0])
+    assert [len(e) for e in evs] == [0, 0, 0, 1]
+    assert evs[-1][0].kind == "breach_end"
+    assert not eng.is_breached("lat")
+
+
+def test_none_values_are_skipped_without_touching_state():
+    eng = SLOEngine([SLOSpec("lat", "p99", target=5.0, breach_for=2)])
+    evs = _eval_seq(eng, "p99", [6.0, None, 6.0])
+    assert [len(e) for e in evs] == [0, 0, 1]  # None neither resets nor counts
+
+
+def test_wildcard_metric_tracks_each_concrete_key_separately():
+    eng = SLOEngine([SLOSpec("fit", "canary_fitness.*", target=0.9, op=">=")])
+    evs = eng.evaluate({"canary_fitness.a": 0.5, "canary_fitness.b": 0.95})
+    assert [(e.kind, e.metric) for e in evs] == [
+        ("breach_start", "canary_fitness.a")
+    ]
+    assert eng.is_breached("fit", "canary_fitness.a")
+    assert not eng.is_breached("fit", "canary_fitness.b")
+
+
+def test_burn_rate_is_the_violating_window_fraction():
+    eng = SLOEngine([SLOSpec("lat", "p99", target=5.0, window=4)])
+    _eval_seq(eng, "p99", [6.0, 3.0, 6.0, 6.0])
+    assert eng.burn_rate("lat", "p99") == pytest.approx(0.75)
+    assert eng.burn_rate("lat", "nope") == 0.0
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="op"):
+        SLOSpec("x", "m", target=1.0, op="==")
+    with pytest.raises(ValueError, match="looser"):
+        SLOSpec("x", "m", target=5.0, clear=6.0)  # op <=
+    with pytest.raises(ValueError, match="looser"):
+        SLOSpec("x", "m", target=0.9, clear=0.8, op=">=")
+    with pytest.raises(ValueError, match="breach_for"):
+        SLOSpec("x", "m", target=1.0, breach_for=0)
+    with pytest.raises(ValueError, match="duplicate"):
+        SLOEngine([SLOSpec("a", "m", target=1.0), SLOSpec("a", "n", target=1.0)])
+
+
+def test_fleet_slo_sample_flattens_snapshot():
+    snap = {
+        "decode_p50_ms": 1.0,
+        "decode_p99_ms": 4.0,
+        "excluded": ["i1"],
+        "excluded_total": 2,
+        "backpressure_flushes": 3,
+        "instances": {
+            "i0": {"cache": {"hit_rate": 0.5}, "flushes": 7},
+            "i1": {"cache": {}, "flushes": 0},
+        },
+        "canary": {"embed": {"rolling_fitness": 0.97}},
+    }
+    s = fleet_slo_sample(snap)
+    assert s["decode_p99_ms"] == 4.0
+    assert s["excluded_total"] == 2
+    assert s["instances"] == 2 and s["flushes_total"] == 7
+    assert s["hit_rate.i0"] == 0.5 and s["hit_rate.i1"] is None
+    assert s["canary_fitness.embed"] == 0.97
+    assert fleet_slo_sample(snap, extra={"q": 1})["q"] == 1
+
+
+# ---------------------------------------------------------------------------
+# exposition + scrape server
+# ---------------------------------------------------------------------------
+def _registry():
+    reg = obs.MetricsRegistry()
+    reg.counter("decode_calls", instance="i0").inc(3)
+    reg.gauge("canary_fitness", payload="e").set(0.75)
+    h = reg.histogram("decode_ms", buckets=(1.0, 10.0))
+    for v in (0.5, 2.0, 20.0):
+        h.observe(v)
+    return reg
+
+
+def test_exposition_renders_live_registry_histograms():
+    text = render_exposition(registry=_registry())
+    assert '# TYPE decode_calls counter' in text
+    assert 'decode_calls{instance="i0"} 3' in text
+    assert 'canary_fitness{payload="e"} 0.75' in text
+    # full cumulative histogram, not a summary
+    assert 'decode_ms_bucket{le="1.0"} 1' in text
+    assert 'decode_ms_bucket{le="10.0"} 2' in text
+    assert 'decode_ms_bucket{le="+Inf"} 3' in text
+    assert 'decode_ms_count 3' in text
+    assert text.endswith("\n")
+
+
+def test_exposition_renders_snapshot_and_fleet():
+    snap = _registry().as_dict()
+    fleet = {
+        "fleet": {"hits": 5, "misses": 1, "hit_rate": 5 / 6},
+        "backpressure_flushes": 0,
+        "excluded": [],
+        "excluded_total": 1,
+        "decode_p99_ms": None,
+        "canary": {"e": {"checks": 2, "breaches": 0, "rolling_fitness": 0.9}},
+        "instances": {"i0": {"cache": {"hits": 5}, "flushes": 4}},
+    }
+    text = render_exposition(registry=snap, fleet=fleet)
+    assert '# TYPE decode_ms summary' in text  # snapshot = quantile series
+    assert 'decode_ms{quantile="0.5"}' in text
+    assert 'repro_fleet_cache_hits 5' in text
+    assert 'repro_fleet_excluded_total 1' in text
+    assert "repro_fleet_decode_p99_ms" not in text  # None -> omitted
+    assert 'repro_fleet_canary_fitness{payload="e"} 0.9' in text
+    assert 'repro_fleet_instance_flushes{instance="i0"} 4' in text
+
+
+def test_metrics_server_scrapes_and_404s():
+    with MetricsServer(lambda: render_exposition(registry=_registry())) as srv:
+        host, port = srv.address
+        body = urllib.request.urlopen(
+            f"http://{host}:{port}/metrics"
+        ).read().decode()
+        assert 'decode_calls{instance="i0"} 3' in body
+        with pytest.raises(urllib.error.HTTPError) as e:
+            urllib.request.urlopen(f"http://{host}:{port}/other")
+        assert e.value.code == 404
+
+
+def test_serve_metrics_once_cli(tmp_path, capsys):
+    snap = tmp_path / "fleet.json"
+    snap.write_text(json.dumps({
+        "fleet": {"hits": 1, "misses": 0},
+        "instances": {},
+    }))
+    assert serve_metrics.main([str(snap), "--once"]) == 0
+    assert "repro_fleet_cache_hits 1" in capsys.readouterr().out
+    bad = tmp_path / "bad.json"
+    bad.write_text("{}")
+    assert serve_metrics.main([str(bad), "--once"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# bounded fit log + events buffer
+# ---------------------------------------------------------------------------
+def test_event_log_rotates_owned_path(tmp_path):
+    p = tmp_path / "fit.jsonl"
+    log = obs.JsonlEventLog(str(p), max_bytes=512, backups=2)
+    for k in range(64):
+        log.emit("tick", step=k, pad="x" * 32)
+    log.close()
+    assert log.rotations > 0 and log.events_dropped == 0
+    assert p.exists() and p.stat().st_size <= 512
+    assert (tmp_path / "fit.jsonl.1").exists()
+    assert not (tmp_path / "fit.jsonl.3").exists()  # backups honored
+    # every surviving line is intact JSON, newest file has the tail
+    recs = [json.loads(s) for s in p.read_text().splitlines()]
+    assert recs[-1]["step"] == 63
+
+
+def test_event_log_drops_when_sink_is_borrowed():
+    buf = io.StringIO()
+    log = obs.JsonlEventLog(buf, max_bytes=128)
+    for k in range(32):
+        log.emit("tick", step=k)
+    assert log.events_dropped > 0
+    assert log.bytes_written <= 128
+    kept = [json.loads(s) for s in buf.getvalue().splitlines()]
+    assert kept and kept[0]["step"] == 0  # oldest kept, newest dropped
+
+
+def test_events_buffer_and_fit_log_forwarding():
+    buf = io.StringIO()
+    obs.set_fit_log(buf)
+    try:
+        obs.clear_events()
+        obs.emit_event("quality_breach", payload="e", fitness=0.5)
+        obs.emit_event("controller_decision", action="hold")
+        assert [e["event"] for e in obs.events()] == [
+            "quality_breach", "controller_decision",
+        ]
+        breaches = obs.events("quality_breach")
+        assert len(breaches) == 1 and breaches[0]["payload"] == "e"
+        assert breaches[0]["t"] > 0
+        forwarded = [json.loads(s) for s in buf.getvalue().splitlines()]
+        assert [r["event"] for r in forwarded] == [
+            "quality_breach", "controller_decision",
+        ]
+        obs.clear_events()
+        assert obs.events() == []
+    finally:
+        obs.set_fit_log(None)
+
+
+# ---------------------------------------------------------------------------
+# report --format json
+# ---------------------------------------------------------------------------
+def test_report_json_format(tmp_path, capsys):
+    obs.enable_tracing()
+    try:
+        with obs.span("controller.step"):
+            with obs.span("controller.scale_up", instance="s0"):
+                pass
+        trace = tmp_path / "trace.json"
+        obs.export_chrome_trace(
+            str(trace), metrics={"fleet": {"hits": 1, "misses": 0}}
+        )
+    finally:
+        obs.disable_tracing()
+    assert report.main([str(trace), "--format", "json", "--top", "2"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["spans"] == 2
+    stages = {r["stage"] for r in doc["stages"]}
+    assert stages == {"controller.step", "controller.scale_up"}
+    slowest = {s["stage"]: s for s in doc["slowest"]}
+    assert slowest["controller.scale_up"]["args"]["instance"] == "s0"
+    assert "trace_id" not in slowest["controller.step"]["args"]
+    assert doc["metrics"]["fleet"]["hits"] == 1
+    # text mode still works on the same file
+    assert report.main([str(trace), "--top", "2"]) == 0
