@@ -27,6 +27,22 @@ fails CI when a headline metric regresses more than ``--tolerance``
 - ``obs.canary_overhead_pct`` (BENCH_obs.json, the online-fitness-canary
                               cell — same absolute 10%% ceiling, same
                               rationale)
+- ``repair.time_to_repair_s`` / ``repair.refit_entries_per_sec``
+                              (BENCH_repair.json, the read-repair drill:
+                              worst repair wall-time across the drill's
+                              corruption + quality phases, and the online
+                              re-compression throughput of the quality
+                              refit — both gated against ABSOLUTE bounds:
+                              the refit is a seconds-scale SGD loop whose
+                              wall-clock swings ~2x with machine load, so
+                              a relative tolerance would gate noise; the
+                              bounds catch order-of-magnitude regressions
+                              like an undertrained config that loops)
+
+When a metric fails the gate, the offending cell's baseline vs measured
+value is also appended to the GitHub job summary
+(``$GITHUB_STEP_SUMMARY``) so a red run names the regression without
+opening the log.
 
 Metrics whose BENCH file is absent are skipped unless named in
 ``--require`` (CI's tier1 job requires stream+fleet+kernels, the
@@ -138,6 +154,24 @@ GROUPS = {
             ),
         },
     ),
+    "repair": (
+        "BENCH_repair.json",
+        {
+            "time_to_repair_s": (
+                lambda runs: max(r["time_to_repair_s"] for r in runs),
+                False,
+                30.0,
+            ),
+            "refit_entries_per_sec": (
+                lambda runs: max(
+                    r["refit_entries_per_sec"] for r in runs
+                    if r.get("refit_entries_per_sec") is not None
+                ),
+                True,
+                150.0,
+            ),
+        },
+    ),
     "kernels": (
         "BENCH_kernels.json",
         {
@@ -168,6 +202,30 @@ def current_metrics() -> dict[str, dict[str, float]]:
                 continue
         out[group] = vals
     return out
+
+
+def _write_step_summary(failures: list[dict], tolerance: float) -> None:
+    """Append the offending cells (baseline vs measured) to the GitHub
+    job summary so a red gate is readable without opening the log."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = [
+        "### Bench gate failed",
+        "",
+        f"{len(failures)} metric(s) out of bounds "
+        f"(tolerance {tolerance:.0%}, or an absolute budget):",
+        "",
+        "| cell | baseline | measured | bound |",
+        "| --- | --- | --- | --- |",
+    ]
+    for f in failures:
+        lines.append(
+            f"| `{f['cell']}` | {f['baseline']} | {f['measured']} "
+            f"| `{f['bound']}` |"
+        )
+    with open(path, "a") as fh:
+        fh.write("\n".join(lines) + "\n")
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -216,7 +274,7 @@ def main(argv: list[str] | None = None) -> int:
     with open(args.baseline) as f:
         baseline = json.load(f)
 
-    failures = []
+    failures: list[dict] = []
     checked = 0
     for group, metrics in sorted(current.items()):
         base_group = baseline.get(group, {})
@@ -231,7 +289,10 @@ def main(argv: list[str] | None = None) -> int:
                 status = "ok" if ok else "OVER BUDGET"
                 print(f"  {group}.{name:<16} = {value:>12.1f}  ({bound}) {status}")
                 if not ok:
-                    failures.append(f"{group}.{name}")
+                    failures.append({
+                        "cell": f"{group}.{name}", "measured": value,
+                        "baseline": f"{limit} (absolute)", "bound": bound,
+                    })
                 continue
             base = base_group.get(name)
             if base is None:
@@ -252,16 +313,21 @@ def main(argv: list[str] | None = None) -> int:
                 f"(baseline {base:.1f}, {bound}) {status}"
             )
             if not ok:
-                failures.append(f"{group}.{name}")
+                failures.append({
+                    "cell": f"{group}.{name}", "measured": value,
+                    "baseline": base, "bound": bound,
+                })
     if not checked:
         print("check_bench: nothing to check (no BENCH files found)")
         return 1
     if failures:
+        names = [f["cell"] for f in failures]
         print(
             f"check_bench: {len(failures)} metric(s) out of bounds "
             f"(regressed > {args.tolerance:.0%} or over an absolute budget): "
-            f"{', '.join(failures)}"
+            f"{', '.join(names)}"
         )
+        _write_step_summary(failures, args.tolerance)
         return 1
     print(f"check_bench: {checked} metric(s) within bounds")
     return 0

@@ -13,6 +13,7 @@
 #     scripts/run_tests.sh temporal         # versioned payloads + fig10 smoke
 #     scripts/run_tests.sh obs              # tracing/metrics suite + traced fleet smoke
 #     scripts/run_tests.sh slo              # SLO/canary/controller suites + autoscale drill
+#     scripts/run_tests.sh repair           # read-repair suite + fault-injection drill
 #     scripts/run_tests.sh bench-gate       # BENCH_*.json vs committed baseline
 #     scripts/run_tests.sh -m 'not slow'    # pytest passthrough (custom select)
 #
@@ -134,6 +135,23 @@ phase_slo() {
     python scripts/slo_smoke.py
 }
 
+phase_repair() {
+    # Replica-aware read repair: the unit/integration suite, then the
+    # end-to-end fault-injection drill — a REAL 3-worker socket fleet
+    # (replication=2) serves through a CRC-flipped chunk and an injected
+    # fitness regression with zero failed tickets and bit-identical
+    # untouched answers; the RepairController restores the chunk from a
+    # donor replica and re-compresses the breached range online until the
+    # canary clears the SLO.  BENCH_repair.json carries the
+    # time-to-repair / refit-throughput bench cells and
+    # repair_trace.json is the CI trace artifact.
+    python -m pytest -x -q tests/test_repair.py
+    python scripts/repair_drill.py
+    test -s benchmarks/results/BENCH_repair.json
+    test -s benchmarks/results/repair_trace.json
+    echo "repair OK: $(tr -d '\n' < benchmarks/results/BENCH_repair.json | head -c 200)"
+}
+
 phase_bench_gate() {
     # Fail on >30% regression of the headline BENCH metrics vs the
     # committed baseline (scripts/check_bench.py --update reseeds it).
@@ -151,6 +169,7 @@ case "${1:-all}" in
     temporal)          phase_temporal ;;
     obs)               phase_obs ;;
     slo)               phase_slo ;;
+    repair)            phase_repair ;;
     bench-gate)        phase_bench_gate ;;
     all)
         phase_registry
@@ -163,6 +182,7 @@ case "${1:-all}" in
         phase_temporal
         phase_obs
         phase_slo
+        phase_repair
         phase_bench_gate
         ;;
     *)

@@ -14,16 +14,32 @@ the moment the writer closes — no seeking back to patch a length field:
 
     header (as above) | chunk bytes ... | footer | u64 footer_len | 'TCDX'
     footer = chunk index | [ranges block] | [version-index block]
-                         | [held-out block]
+                         | [held-out block] | [patch block]
     chunk index   = u32 n_chunks | n x (u64 offset | u64 length | u32 crc32)
     ranges block  = 'TCDR' | n x (u64 entry_start | u64 entry_stop)
     version index = 'TCDV' | u32 n_versions
                            | n x (i64 base | u32 chunk_start | u32 chunk_stop)
     held-out      = 'TCDQ' | u32 n_entries | n x u64 flat_index | n x f64 value
+    patch block   = 'TCDP' | u32 n_patches
+                           | n x (u64 entry_start | u64 entry_stop
+                                  | u32 chunk_start | u32 chunk_stop
+                                  | u8 codec_len | codec ascii)
 
 The footer blocks after the chunk index are optional and magic-tagged,
 parsed in the fixed order above; any trailing bytes the blocks do not
 account for make the footer corrupt.
+
+The patch (``TCDP``) block is the durable artifact of a read repair
+(``repro.fleet.repair``): each entry names a flat-entry range whose
+decode is OVERRIDDEN by a stand-alone overlay payload whose body is
+``chunks[chunk_start:chunk_stop)``.  Patch chunks always occupy a suffix
+of the chunk index (they are appended by ``repro.stream.writer.
+append_patch`` under the footer reseal discipline), so the BASE payload
+— ``chunks[:n_base]`` — is byte-identical to what was originally
+written and untouched entry ranges keep decoding bit-identically.
+Overlapping patches resolve last-wins (a repair of a repair).  Patches
+are a v3 (single-tensor) feature; a v4 delta container with a patch
+block is rejected.
 
 The held-out (``TCDQ``) block carries ground-truth entries SAMPLED FROM
 THE ORIGINAL TENSOR at fit time (flat index + exact value), recorded by
@@ -79,6 +95,7 @@ FOOTER_MAGIC = b"TCDX"
 RANGES_MAGIC = b"TCDR"  # optional per-chunk entry-range block in the footer
 VINDEX_MAGIC = b"TCDV"  # optional version-index block in the footer
 HELDOUT_MAGIC = b"TCDQ"  # optional held-out ground-truth block in the footer
+PATCH_MAGIC = b"TCDP"  # optional read-repair patch (overlay) block in the footer
 FLAG_CHUNKED = 0x01
 FLAG_DELTA = 0x02  # chunk index is partitioned into versions (v4 only)
 _LEGACY_NTTD_VERSION = 2
@@ -179,6 +196,24 @@ class VersionEntry:
 
 
 @dataclasses.dataclass(frozen=True)
+class PatchEntry:
+    """One read-repair overlay in the ``TCDP`` footer block.
+
+    The overlay's codec body is ``chunks[chunk_start:chunk_stop)``; its
+    decode REPLACES the base payload's values for flat entries in
+    ``[entry_start, entry_stop)`` (the overlay tensor's own shape must
+    hold exactly ``entry_stop - entry_start`` entries, addressed by
+    ``flat - entry_start`` in row-major order).  Entries outside every
+    patch range keep decoding from the untouched base chunks."""
+
+    entry_start: int
+    entry_stop: int
+    chunk_start: int
+    chunk_stop: int
+    codec: str
+
+
+@dataclasses.dataclass(frozen=True)
 class HeldoutEntries:
     """Fit-time ground truth for online fitness canaries: exact values of
     ``n`` entries of the ORIGINAL tensor, addressed by flat index.  Both
@@ -216,6 +251,7 @@ def pack_footer(
     chunks: list[ChunkEntry],
     versions: list[VersionEntry] | None = None,
     heldout: HeldoutEntries | None = None,
+    patches: list[PatchEntry] | None = None,
 ) -> bytes:
     footer = struct.pack("<I", len(chunks)) + b"".join(
         struct.pack("<QQI", c.offset, c.length, c.crc) for c in chunks
@@ -236,6 +272,16 @@ def pack_footer(
             + heldout.indices.astype("<i8").tobytes()
             + heldout.values.astype("<f8").tobytes()
         )
+    if patches:
+        footer += PATCH_MAGIC + struct.pack("<I", len(patches))
+        for p in patches:
+            name = p.codec.encode("ascii")
+            if not name or len(name) > 255:
+                raise ValueError(f"bad patch codec id {p.codec!r}")
+            footer += struct.pack(
+                "<QQIIB", p.entry_start, p.entry_stop,
+                p.chunk_start, p.chunk_stop, len(name),
+            ) + name
     return footer + struct.pack("<Q", len(footer)) + FOOTER_MAGIC
 
 
@@ -270,12 +316,45 @@ def _validate_versions(
         raise ValueError(f"{ctx}corrupt payload: version index does not cover chunks")
 
 
+def _validate_patches(
+    patches: list[PatchEntry], n_chunks: int, ctx: str = ""
+) -> None:
+    """Patch chunk ranges must be non-empty, disjoint, and together cover a
+    SUFFIX ``[n_base, n_chunks)`` of the chunk index — the invariant that
+    keeps ``chunks[:n_base]`` the untouched base payload."""
+    covered: set[int] = set()
+    for i, p in enumerate(patches):
+        if p.entry_stop <= p.entry_start or p.entry_start < 0:
+            raise ValueError(f"{ctx}corrupt payload: patch {i} entry range")
+        if not 0 <= p.chunk_start < p.chunk_stop <= n_chunks:
+            raise ValueError(f"{ctx}corrupt payload: patch {i} chunk range")
+        ids = set(range(p.chunk_start, p.chunk_stop))
+        if ids & covered:
+            raise ValueError(f"{ctx}corrupt payload: patch {i} chunks overlap")
+        covered |= ids
+    if covered and covered != set(range(min(covered), n_chunks)):
+        raise ValueError(f"{ctx}corrupt payload: patch chunks must be a suffix")
+
+
+def patch_base_count(n_chunks: int, patches: list[PatchEntry] | None) -> int:
+    """Number of BASE (non-patch) chunks — patch chunks are a validated
+    suffix, so the base payload is always ``chunks[:n_base]``."""
+    if not patches:
+        return n_chunks
+    return min(p.chunk_start for p in patches)
+
+
 def _parse_footer(
     data, header_end: int, ctx: str = ""
-) -> tuple[list[ChunkEntry], list[VersionEntry] | None, HeldoutEntries | None]:
+) -> tuple[
+    list[ChunkEntry],
+    list[VersionEntry] | None,
+    HeldoutEntries | None,
+    list[PatchEntry],
+]:
     """Parse the trailer-addressed footer: chunk index, then the optional
-    magic-tagged TCDR (entry ranges), TCDV (version index), and TCDQ
-    (held-out ground truth) blocks."""
+    magic-tagged TCDR (entry ranges), TCDV (version index), TCDQ
+    (held-out ground truth), and TCDP (read-repair patch) blocks."""
     if len(data) < header_end + _TRAILER_LEN:
         raise ValueError(f"{ctx}truncated payload: chunk trailer")
     if bytes(data[-4:]) != FOOTER_MAGIC:
@@ -330,6 +409,25 @@ def _parse_footer(
             raise ValueError(f"{ctx}corrupt payload: held-out index negative")
         heldout = HeldoutEntries(idx, vals)
         pos += 16 * nq
+    patches: list[PatchEntry] = []
+    if footer[pos : pos + 4] == PATCH_MAGIC:
+        if len(footer) < pos + 8:
+            raise ValueError(f"{ctx}truncated payload: patch block")
+        (np_,) = struct.unpack("<I", footer[pos + 4 : pos + 8])
+        pos += 8
+        for _ in range(np_):
+            if len(footer) < pos + 25:
+                raise ValueError(f"{ctx}truncated payload: patch block")
+            lo, hi, cstart, cstop, nlen = struct.unpack(
+                "<QQIIB", footer[pos : pos + 25]
+            )
+            pos += 25
+            if len(footer) < pos + nlen:
+                raise ValueError(f"{ctx}truncated payload: patch codec id")
+            codec = footer[pos : pos + nlen].decode("ascii")
+            pos += nlen
+            patches.append(PatchEntry(lo, hi, cstart, cstop, codec))
+        _validate_patches(patches, n, ctx)
     if pos != len(footer):
         raise ValueError(f"{ctx}corrupt payload: chunk index length mismatch")
     chunks = []
@@ -339,7 +437,7 @@ def _parse_footer(
             raise ValueError(f"{ctx}corrupt payload: chunk outside data region")
         start, stop = ranges[i] if ranges is not None else (None, None)
         chunks.append(ChunkEntry(off, length, crc, start, stop))
-    return chunks, versions, heldout
+    return chunks, versions, heldout, patches
 
 
 def _check_delta(
@@ -349,19 +447,122 @@ def _check_delta(
     are mandatory, so a v4 file is never silently read as a single tensor."""
     if not (flags & FLAG_CHUNKED) or not (flags & FLAG_DELTA):
         raise ValueError(f"{ctx}corrupt payload: v4 container without delta flags")
-    chunks, versions, heldout = _parse_footer(data, header_end, ctx)
+    chunks, versions, heldout, patches = _parse_footer(data, header_end, ctx)
     if versions is None:
         raise ValueError(f"{ctx}corrupt payload: v4 container missing version index")
+    if patches:
+        raise ValueError(f"{ctx}corrupt payload: patch block on a delta container")
     return chunks, versions, heldout
 
 
-def read_chunk(data, chunk: ChunkEntry) -> bytes:
+def read_chunk(data, chunk: ChunkEntry, ctx: str = "") -> bytes:
+    """Materialize one chunk's bytes, CRC-checked.  ``ctx`` (conventionally
+    ``f"{path}: "``) prefixes both failure messages so a corrupt chunk names
+    the file it lives in, matching every other container error path."""
     raw = bytes(data[chunk.offset : chunk.offset + chunk.length])
     if len(raw) < chunk.length:
-        raise ValueError("truncated payload: chunk body")
+        raise ValueError(f"{ctx}truncated payload: chunk body")
     if zlib.crc32(raw) & 0xFFFFFFFF != chunk.crc:
-        raise ValueError("corrupt payload: chunk checksum mismatch")
+        raise ValueError(f"{ctx}corrupt payload: chunk checksum mismatch")
     return raw
+
+
+class PatchedEncoded(Encoded):
+    """A base payload with read-repair overlays applied last-wins.
+
+    Decode semantics of a patched v3 container: entries inside a patch's
+    ``[entry_start, entry_stop)`` come from the overlay payload (addressed
+    by ``flat - entry_start`` in the overlay's own row-major index space);
+    everything else comes from the untouched base payload — which is why
+    untouched ranges stay bit-identical through a repair.  Serialization
+    goes through the container file (writer ``append_patch``), not
+    ``to_bytes``: the patched whole has no single codec body.
+    """
+
+    def __init__(
+        self, base: Encoded, overlays: list[tuple[PatchEntry, Encoded]]
+    ):
+        self.base = base
+        self.overlays = list(overlays)
+        for p, enc in self.overlays:
+            n = int(np.prod(enc.shape))
+            if n != p.entry_stop - p.entry_start:
+                raise ValueError(
+                    f"corrupt payload: patch overlay shape {enc.shape} holds "
+                    f"{n} entries, range needs {p.entry_stop - p.entry_start}"
+                )
+
+    @property
+    def codec_name(self) -> str:  # type: ignore[override]
+        return self.base.codec_name
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.base.shape
+
+    def decode_at(self, indices: np.ndarray) -> np.ndarray:
+        out = np.asarray(self.base.decode_at(indices))
+        if not self.overlays:
+            return out
+        idx = np.asarray(indices, dtype=np.int64)
+        flat = np.ravel_multi_index(tuple(idx.T), self.base.shape).astype(np.int64)
+        for p, enc in self.overlays:  # later patches win
+            mask = (flat >= p.entry_start) & (flat < p.entry_stop)
+            if not mask.any():
+                continue
+            local = flat[mask] - p.entry_start
+            pos = np.stack(
+                np.unravel_index(local, enc.shape), axis=1
+            ).astype(np.int64)
+            out = out.copy()
+            out[mask] = np.asarray(enc.decode_at(pos), out.dtype)
+        return out
+
+    def to_dense(self) -> np.ndarray:
+        out = np.asarray(self.base.to_dense()).copy()
+        flat = out.reshape(-1)
+        for p, enc in self.overlays:
+            flat[p.entry_start : p.entry_stop] = np.asarray(
+                enc.to_dense(), flat.dtype
+            ).reshape(-1)
+        return out
+
+    def payload_bytes(self) -> int:
+        return self.base.payload_bytes() + sum(
+            enc.payload_bytes() for _, enc in self.overlays
+        )
+
+    def to_bytes(self) -> bytes:
+        raise NotImplementedError(
+            "patched payloads serialize through the container file "
+            "(stream.writer.append_patch), not to_bytes"
+        )
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "Encoded":
+        raise NotImplementedError("patched payloads load via the container file")
+
+    def cache_nbytes(self) -> int:
+        return self.base.cache_nbytes() + sum(
+            enc.cache_nbytes() for _, enc in self.overlays
+        )
+
+    def drop_caches(self) -> None:
+        self.base.drop_caches()
+        for _, enc in self.overlays:
+            enc.drop_caches()
+
+
+def _load_patch_overlay(data, chunks: list[ChunkEntry], p: PatchEntry) -> Encoded:
+    """Materialize one patch overlay's payload from its chunk suffix."""
+    try:
+        codec = get_codec(p.codec)
+    except KeyError:
+        raise ValueError(f"unknown codec id {p.codec!r} in patch block") from None
+    body = b"".join(
+        read_chunk(data, c) for c in chunks[p.chunk_start : p.chunk_stop]
+    )
+    return codec.encoded_cls.from_bytes(body)
 
 
 def save_bytes(enc: Encoded) -> bytes:
@@ -403,10 +604,24 @@ def load_bytes(data: bytes) -> Encoded:
     if flags & FLAG_DELTA:
         raise ValueError("corrupt payload: delta flag on a v3 container")
     if flags & FLAG_CHUNKED:
-        chunks, versions, _ = _parse_footer(data, off)
+        chunks, versions, _, patches = _parse_footer(data, off)
         if versions is not None:
             raise ValueError("corrupt payload: version index on a v3 container")
-        body = b"".join(read_chunk(data, c) for c in chunks)
+        n_base = patch_base_count(len(chunks), patches)
+        body = b"".join(read_chunk(data, c) for c in chunks[:n_base])
+        if patches:
+            try:
+                codec = get_codec(name)
+            except KeyError:
+                raise ValueError(f"unknown codec id {name!r} in container") from None
+            base = codec.encoded_cls.from_bytes(body)
+            return PatchedEncoded(
+                base,
+                [
+                    (p, _load_patch_overlay(data, chunks, p))
+                    for p in patches
+                ],
+            )
     else:
         if len(data) < off + 12:
             raise ValueError("truncated payload: codec id")
@@ -454,10 +669,21 @@ class OpenContainer:
     versions: list[VersionEntry] | None
     view: memoryview
     heldout: HeldoutEntries | None = None
+    #: read-repair overlays (TCDP block); empty for unrepaired files
+    patches: list[PatchEntry] = dataclasses.field(default_factory=list)
 
     @property
     def is_versioned(self) -> bool:
         return self.versions is not None
+
+    @property
+    def n_base(self) -> int:
+        """Chunks before the patch suffix — the untouched base payload."""
+        return patch_base_count(len(self.chunks), self.patches)
+
+    @property
+    def base_chunks(self) -> list[ChunkEntry]:
+        return self.chunks[: self.n_base]
 
     def close(self) -> None:
         mm = self.view.obj
@@ -492,8 +718,9 @@ def open_container(path: str) -> OpenContainer:
             return OpenContainer(name, flags, chunks, versions, view, heldout)
         if flags & FLAG_DELTA:
             raise ValueError(f"{ctx}corrupt payload: delta flag on a v3 container")
+        patches: list[PatchEntry] = []
         if flags & FLAG_CHUNKED:
-            chunks, versions, heldout = _parse_footer(view, off, ctx)
+            chunks, versions, heldout, patches = _parse_footer(view, off, ctx)
             if versions is not None:
                 raise ValueError(
                     f"{ctx}corrupt payload: version index on a v3 container"
@@ -505,7 +732,7 @@ def open_container(path: str) -> OpenContainer:
             if len(view) < off + 12 + body_len:
                 raise ValueError(f"{ctx}truncated payload: body")
             chunks, heldout = [ChunkEntry(off + 12, body_len, crc)], None
-        return OpenContainer(name, flags, chunks, None, view, heldout)
+        return OpenContainer(name, flags, chunks, None, view, heldout, patches)
     except Exception:
         view.release()
         mm.close()
@@ -539,10 +766,16 @@ def container_index(
     which chunks belong to which version).  Unlike :func:`open_container`
     no mmap outlives the call — the ring only needs the index, never
     chunk bytes.
+
+    Read-repair patch chunks (the TCDP suffix) are EXCLUDED: routing is by
+    the base chunks' entry-range partition, which a repair never changes,
+    so a patched file keeps the exact ring and ownership tables it had
+    before the repair.  Callers that need the overlays use
+    :func:`open_container`.
     """
     oc = open_container(path)
     oc.close()
-    return oc.codec, oc.chunks, oc.versions
+    return oc.codec, oc.base_chunks, oc.versions
 
 
 def chunk_index(path: str) -> tuple[str, list[ChunkEntry]]:

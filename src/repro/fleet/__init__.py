@@ -54,6 +54,12 @@ from repro.fleet.controller import (
 from repro.fleet.frontend import FleetFrontend
 from repro.fleet.metrics import CacheCounters, FleetMetrics, InstanceMetrics, collect
 from repro.fleet.rebalance import RebalanceReport, rebalance
+from repro.fleet.repair import (
+    RepairConfig,
+    RepairController,
+    RepairReport,
+    RepairTicket,
+)
 from repro.fleet.router import HashRing, PayloadRoute
 from repro.fleet.transport import (
     LocalTransport,
@@ -76,6 +82,10 @@ __all__ = [
     "PayloadRoute",
     "RebalanceReport",
     "RemoteError",
+    "RepairConfig",
+    "RepairController",
+    "RepairReport",
+    "RepairTicket",
     "ScalingPolicy",
     "SocketTransport",
     "Transport",

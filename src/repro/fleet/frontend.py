@@ -33,6 +33,15 @@ group whose replicas are ALL excluded fails its ticket with a clear
 error instead of hanging.  ``rebalance`` removes excluded members for
 real (ring change + retirement).
 
+Read repair's serving half: a sub-batch that FAILS on one instance
+(e.g. a quarantined corrupt chunk raising ``ChunkCorruptError`` on the
+worker, or the transport dying mid-flush) is retried on the group's
+surviving replicas before the ticket is failed — with ``replication=R>1``
+a single corrupt replica costs zero failed tickets, and each failover is
+recorded as a ``decode_failover`` event.  ``refresh(name)`` fans the
+post-repair epoch switch (re-open the container file, clear quarantine)
+to every live member.
+
     fleet = FleetFrontend(4, cache_bytes=1 << 24, replication=1)
     fleet.load_stream("embed", "embed.tcdc", tile_entries=4096)
     fleet.decode_at("embed", idx)        # == single instance, bit-exact
@@ -307,6 +316,21 @@ class FleetFrontend:
             except TransportError as e:
                 self.exclude(iid, e)
 
+    def refresh(self, name: str) -> None:
+        """Fan a payload refresh to every live member — the repair
+        controller's epoch switch after it rewrote chunks or appended a
+        patch: each instance re-opens the container file and drops its
+        quarantine marks and cached decode state for the payload."""
+        if name not in self.routes:
+            raise KeyError(f"no payload {name!r}")
+        for iid, t in self.transports.items():
+            if iid in self.excluded:
+                continue
+            try:
+                t.refresh(name)
+            except TransportError as e:
+                self.exclude(iid, e)
+
     def apply_ownership(self, name: str) -> None:
         """(Re-)install each instance's ownership filter for a payload
         from the CURRENT ring — called at load and after every rebalance.
@@ -465,6 +489,9 @@ class FleetFrontend:
         # execute
         parts: dict[int, list[tuple[np.ndarray, np.ndarray]]] = {}
         part_failed: dict[int, Exception] = {}
+        #: sub-batches that failed on their planned instance, eligible for
+        #: replica failover: (failed instance, plan item, error)
+        retries: list[tuple[str, tuple, Exception]] = []
         with obs.span(
             "fleet.flush",
             tickets=len(queue),
@@ -472,7 +499,9 @@ class FleetFrontend:
         ):
             for iid, items in plan.items():
                 if items:
-                    self._run_instance(iid, items, parts, part_failed)
+                    self._run_instance(iid, items, parts, part_failed, retries)
+            if retries:
+                self._retry_failed(retries, parts, part_failed)
         # reassemble in request order
         sizes = {ticket: idx.shape[0] for ticket, _, idx, _ in queue}
         for ticket, _, idx, _ in queue:
@@ -494,17 +523,23 @@ class FleetFrontend:
         items: list[tuple[int, str, int | None, np.ndarray, np.ndarray]],
         parts: dict[int, list[tuple[np.ndarray, np.ndarray]]],
         part_failed: dict[int, Exception],
+        retries: list[tuple[str, tuple, Exception]],
     ) -> None:
         """Submit this instance's sub-batches through its transport's
         coalescing path, flushing early whenever the in-flight byte budget
-        would overflow.  A transport death mid-batch fails the unresolved
-        tickets cleanly and excludes the instance from future routing."""
+        would overflow.  A failed sub-batch — request-level error or the
+        transport dying mid-batch — goes to ``retries`` for replica
+        failover instead of failing its ticket outright; a transport death
+        additionally excludes the instance from future routing."""
         t = self.transports[iid]
-        pending: list[tuple[int, int, np.ndarray]] = []  # (ticket, rid, pos)
+        #: (ticket, rid, pos, plan item) — the item rides along so a
+        #: failure can be retried on a replica with full context
+        pending: list[tuple[int, int, np.ndarray, tuple]] = []
         inflight = 0
         resolved: set[int] = set()  # tickets answered by an early flush
         try:
-            for ticket, name, version, sub_idx, pos in items:
+            for item in items:
+                ticket, name, version, sub_idx, pos = item
                 cost = sub_idx.shape[0] * _OUT_BYTES_PER_ENTRY + sub_idx.nbytes
                 if (
                     self.max_inflight_bytes is not None
@@ -512,32 +547,98 @@ class FleetFrontend:
                     and inflight + cost > self.max_inflight_bytes
                 ):
                     self.backpressure_flushes += 1
-                    self._flush_instance(iid, t, pending, parts, part_failed)
+                    self._flush_instance(iid, t, pending, parts, retries)
                     resolved.update(p[0] for p in pending)
                     pending, inflight = [], 0
                 rid = t.submit(name, sub_idx, version=version)
-                pending.append((ticket, rid, pos))
+                pending.append((ticket, rid, pos, item))
                 inflight += cost
                 self._peak_gauge[iid].set_max(inflight)
             if pending:
-                self._flush_instance(iid, t, pending, parts, part_failed)
+                self._flush_instance(iid, t, pending, parts, retries)
         except TransportError as e:
             self.exclude(iid, e)
-            for ticket, *_ in items:
-                if ticket not in resolved:
-                    part_failed[ticket] = e
+            for item in items:
+                if item[0] not in resolved:
+                    retries.append((iid, item, e))
 
-    def _flush_instance(self, iid, transport, pending, parts, part_failed) -> None:
+    def _flush_instance(self, iid, transport, pending, parts, retries) -> None:
         # latency is measured with raw perf_counter reads, independent of
         # tracing, so the metrics are identical with tracing off or on
         with obs.span("transport.flush", instance=iid, requests=len(pending)):
             t0 = time.perf_counter()
             results, failures = transport.flush()
             self._lat_hist[iid].observe(time.perf_counter() - t0)
-        for ticket, rid, pos in pending:
+        for ticket, rid, pos, item in pending:
             if rid in results:
                 parts.setdefault(ticket, []).append((pos, results[rid]))
             else:
-                part_failed[ticket] = failures.get(
+                retries.append((iid, item, failures.get(
                     rid, RuntimeError(f"instance {iid}: ticket vanished")
-                )
+                )))
+
+    def _retry_failed(
+        self,
+        retries: list[tuple[str, tuple, Exception]],
+        parts: dict[int, list[tuple[np.ndarray, np.ndarray]]],
+        part_failed: dict[int, Exception],
+    ) -> None:
+        """Replica failover: re-route each failed sub-batch to its groups'
+        surviving replicas (decode-through keeps any owning replica
+        bit-identical).  Only when no healthy replica remains does the
+        original error reach the ticket.  Each successful failover emits a
+        ``decode_failover`` event naming source, target, and cause —
+        the repair controller's corruption signal rides the same poll."""
+        for failed_iid, item, err in retries:
+            ticket = item[0]
+            if ticket in part_failed:
+                continue
+            if not self._retry_on_replicas(failed_iid, item, err, parts):
+                part_failed[ticket] = err
+
+    def _retry_on_replicas(
+        self,
+        failed_iid: str,
+        item: tuple[int, str, int | None, np.ndarray, np.ndarray],
+        err: Exception,
+        parts: dict[int, list[tuple[np.ndarray, np.ndarray]]],
+    ) -> bool:
+        ticket, name, version, sub_idx, pos = item
+        route = self.routes.get(name)
+        group_owners = self._group_owners.get(name)
+        if route is None or group_owners is None:
+            return False
+        gids = route.group_of(route.flat(sub_idx), version)
+        split: dict[str, list[np.ndarray]] = {}
+        for gid in np.unique(gids):
+            cand = [
+                r for r in group_owners[int(gid)]
+                if r != failed_iid and r not in self.excluded
+            ]
+            if not cand:
+                return False  # no surviving replica for this group
+            split.setdefault(cand[0], []).append(np.nonzero(gids == gid)[0])
+        done: list[tuple[np.ndarray, np.ndarray]] = []
+        for iid, sels in split.items():
+            sel = np.concatenate(sels)
+            t = self.transports[iid]
+            try:
+                rid = t.submit(name, sub_idx[sel], version=version)
+                results, _failures = t.flush()
+            except TransportError as e:
+                self.exclude(iid, e)
+                return False
+            if rid not in results:
+                return False
+            done.append((pos[sel], results[rid]))
+            obs.emit_event(
+                "decode_failover",
+                payload=name,
+                from_instance=failed_iid,
+                to_instance=iid,
+                entries=int(len(sel)),
+                ticket=ticket,
+                error=str(err),
+            )
+        parts.setdefault(ticket, []).extend(done)
+        return True

@@ -87,7 +87,10 @@ from repro.serve.codec_service import CodecService, Ownership
     OP_DROP_UNOWNED,
     OP_PAYLOADS,
     OP_SHUTDOWN,
-) = range(13)
+    OP_REFRESH,
+    OP_EXPORT_CHUNK,
+    OP_INJECT_FAULT,
+) = range(16)
 
 ST_OK, ST_ERROR = 0, 1
 
@@ -345,6 +348,9 @@ class Transport(Protocol):
     def export_tiles(self, name: str) -> dict[int, np.ndarray]: ...
     def admit_tile(self, name: str, tid: int, values: np.ndarray) -> bool: ...
     def drop_unowned(self, name: str) -> int: ...
+    def refresh(self, name: str) -> None: ...
+    def export_chunk(self, name: str, chunk: int) -> bytes | None: ...
+    def inject_fault(self, name: str, fault: dict) -> None: ...
     def close(self) -> None: ...
 
 
@@ -430,6 +436,15 @@ class LocalTransport:
 
     def drop_unowned(self, name) -> int:
         return self.service.drop_unowned(name)
+
+    def refresh(self, name) -> None:
+        self.service.refresh(name)
+
+    def export_chunk(self, name, chunk) -> bytes | None:
+        return self.service.export_chunk(name, chunk)
+
+    def inject_fault(self, name, fault) -> None:
+        self.service.inject_fault(name, fault)
 
     def close(self) -> None:
         for name in list(self.service.payloads()):
@@ -572,13 +587,17 @@ class SocketTransport:
         canary_seed: int = 0,
         canary_min_fitness: float | None = None,
         debug_flush_sleep_ms: float = 0.0,
+        debug_corrupt_chunk: list[str] | None = None,
+        debug_fitness_noise: list[str] | None = None,
     ) -> "SocketTransport":
         """Launch ``python -m repro.fleet.worker`` as a child process and
         connect to it.  Default address is a Unix socket in a fresh temp
         dir; pass ``tcp:host:port`` to cross machines.  The returned
         transport owns the process — ``close()`` shuts it down.
-        ``debug_flush_sleep_ms`` is the worker's latency fault injector
-        (SLO drills); leave 0 outside tests."""
+        ``debug_flush_sleep_ms`` (latency), ``debug_corrupt_chunk``
+        (``NAME:CHUNK`` entries) and ``debug_fitness_noise``
+        (``NAME:LO:HI:SIGMA[:SEED]`` entries) are the worker's fault
+        injectors for SLO/repair drills; leave unset outside tests."""
         sock_dir = None
         if address is None:
             sock_dir = tempfile.mkdtemp(prefix="repro-fleet-")
@@ -611,6 +630,10 @@ class SocketTransport:
             cmd += ["--canary-min-fitness", str(canary_min_fitness)]
         if debug_flush_sleep_ms:
             cmd += ["--debug-flush-sleep-ms", str(debug_flush_sleep_ms)]
+        for spec in debug_corrupt_chunk or []:
+            cmd += ["--debug-corrupt-chunk", spec]
+        for spec in debug_fitness_noise or []:
+            cmd += ["--debug-fitness-noise", spec]
         proc = subprocess.Popen(cmd, env=env)
         try:
             t = cls(
@@ -730,6 +753,20 @@ class SocketTransport:
 
     def drop_unowned(self, name) -> int:
         return self._request(OP_DROP_UNOWNED, Writer().str(name).bytes()).u64()
+
+    def refresh(self, name) -> None:
+        self._request(OP_REFRESH, Writer().str(name).bytes())
+
+    def export_chunk(self, name, chunk) -> bytes | None:
+        body = Writer().str(name).u64(int(chunk)).bytes()
+        r = self._request(OP_EXPORT_CHUNK, body)
+        return r.blob() if r.u8() else None
+
+    def inject_fault(self, name, fault) -> None:
+        body = Writer().str(name).blob(
+            json.dumps(fault).encode("utf-8")
+        ).bytes()
+        self._request(OP_INJECT_FAULT, body)
 
     def close(self) -> None:
         if self._dead is None:

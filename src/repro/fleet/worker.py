@@ -46,11 +46,14 @@ from repro.fleet.transport import (
     FLUSH_WANT_SPANS,
     OP_ADMIT_TILE,
     OP_DROP_UNOWNED,
+    OP_EXPORT_CHUNK,
     OP_EXPORT_TILES,
     OP_FLUSH,
+    OP_INJECT_FAULT,
     OP_LOAD,
     OP_PAYLOADS,
     OP_PING,
+    OP_REFRESH,
     OP_SET_OWNERSHIP,
     OP_SHAPE,
     OP_SHUTDOWN,
@@ -75,11 +78,53 @@ from repro.serve.codec_service import CodecService
 _ENV_TRACE = os.environ.get("REPRO_TRACE", "") not in ("", "0")
 
 
+def parse_fault_flags(
+    corrupt: list[str] | None, noise: list[str] | None
+) -> dict[str, list[dict]]:
+    """Parse the ``--debug-corrupt-chunk NAME:CHUNK`` and
+    ``--debug-fitness-noise NAME:LO:HI:SIGMA[:SEED]`` CLI specs into
+    payload-name-keyed ``CodecService.inject_fault`` dicts.  Shared by the
+    worker CLI and the pytest ``fault_injector`` fixture so the CI drill
+    and the unit tests exercise ONE injection surface."""
+    out: dict[str, list[dict]] = {}
+    for spec in corrupt or []:
+        name, _, cid = spec.rpartition(":")
+        if not name or not cid.lstrip("-").isdigit():
+            raise ValueError(
+                f"bad --debug-corrupt-chunk {spec!r} (want NAME:CHUNK)"
+            )
+        out.setdefault(name, []).append(
+            {"kind": "corrupt_chunk", "chunk": int(cid)}
+        )
+    for spec in noise or []:
+        parts = spec.split(":")
+        if len(parts) not in (4, 5):
+            raise ValueError(
+                f"bad --debug-fitness-noise {spec!r} "
+                "(want NAME:LO:HI:SIGMA[:SEED])"
+            )
+        fault = {
+            "kind": "fitness_noise",
+            "entry_start": int(parts[1]),
+            "entry_stop": int(parts[2]),
+            "sigma": float(parts[3]),
+        }
+        if len(parts) == 5:
+            fault["seed"] = int(parts[4])
+        out.setdefault(parts[0], []).append(fault)
+    return out
+
+
 class WorkerState:
     """One connection's request state: the owned service plus the
     pipelined submits awaiting the next flush."""
 
-    def __init__(self, service: CodecService, flush_sleep_s: float = 0.0):
+    def __init__(
+        self,
+        service: CodecService,
+        flush_sleep_s: float = 0.0,
+        fault_specs: dict[str, list[dict]] | None = None,
+    ):
         self.service = service
         #: request id -> service ticket, in arrival order
         self.pending: dict[int, int] = {}
@@ -91,6 +136,11 @@ class WorkerState:
         #: without touching the service's decode path (answers stay
         #: trivially bit-identical)
         self.flush_sleep_s = flush_sleep_s
+        #: CLI fault specs (parse_fault_flags), installed on a payload the
+        #: moment OP_LOAD registers it — consumed once per name; a later
+        #: OP_REFRESH on the payload clears the fault for good, matching
+        #: "the repair epoch starts clean"
+        self.fault_specs = fault_specs or {}
 
 
 def _handle(state: WorkerState, op: int, rid: int, r: Reader) -> bytes | None:
@@ -102,6 +152,8 @@ def _handle(state: WorkerState, op: int, rid: int, r: Reader) -> bytes | None:
     if op == OP_LOAD:
         name, path, tile = r.str(), r.str(), r.i64()
         svc.load_stream(name, path, tile_entries=None if tile < 0 else tile)
+        for fault in state.fault_specs.pop(name, []):
+            svc.inject_fault(name, fault)
         return b""
     if op == OP_UNLOAD:
         svc.unload(r.str())
@@ -181,6 +233,19 @@ def _handle(state: WorkerState, op: int, rid: int, r: Reader) -> bytes | None:
         return Writer().u8(1 if svc.admit_tile(name, tid, r.array()) else 0).bytes()
     if op == OP_DROP_UNOWNED:
         return Writer().u64(svc.drop_unowned(r.str())).bytes()
+    if op == OP_REFRESH:
+        svc.refresh(r.str())
+        return b""
+    if op == OP_EXPORT_CHUNK:
+        raw = svc.export_chunk(r.str(), r.u64())
+        w = Writer().u8(0 if raw is None else 1)
+        if raw is not None:
+            w.blob(raw)
+        return w.bytes()
+    if op == OP_INJECT_FAULT:
+        name = r.str()
+        svc.inject_fault(name, json.loads(r.blob().decode("utf-8")))
+        return b""
     if op == OP_PAYLOADS:
         names = svc.payloads()
         w = Writer().u16(len(names))
@@ -194,10 +259,13 @@ def _handle(state: WorkerState, op: int, rid: int, r: Reader) -> bytes | None:
 
 
 def serve_connection(
-    conn: socket.socket, service: CodecService, flush_sleep_s: float = 0.0
+    conn: socket.socket,
+    service: CodecService,
+    flush_sleep_s: float = 0.0,
+    fault_specs: dict[str, list[dict]] | None = None,
 ) -> None:
     """Run the request loop until EOF, shutdown, or a framing violation."""
-    state = WorkerState(service, flush_sleep_s)
+    state = WorkerState(service, flush_sleep_s, fault_specs)
     while not state.shutdown:
         try:
             payload = recv_frame(conn)
@@ -252,7 +320,22 @@ def main(argv: list[str] | None = None) -> int:
         "--debug-flush-sleep-ms", type=float, default=0.0,
         help="TESTING ONLY: sleep before every flush (latency fault injection)",
     )
+    parser.add_argument(
+        "--debug-corrupt-chunk", action="append", default=None,
+        metavar="NAME:CHUNK",
+        help="TESTING ONLY: fail the named payload chunk's CRC on read "
+        "(repeatable; applied when the payload loads)",
+    )
+    parser.add_argument(
+        "--debug-fitness-noise", action="append", default=None,
+        metavar="NAME:LO:HI:SIGMA[:SEED]",
+        help="TESTING ONLY: add seeded noise to served values in the flat "
+        "entry range (repeatable; applied when the payload loads)",
+    )
     args = parser.parse_args(argv)
+    fault_specs = parse_fault_flags(
+        args.debug_corrupt_chunk, args.debug_fitness_noise
+    )
 
     family, addr = parse_address(args.listen)
     sock = socket.socket(family, socket.SOCK_STREAM)
@@ -276,7 +359,9 @@ def main(argv: list[str] | None = None) -> int:
         conn, _ = sock.accept()
         with conn:
             serve_connection(
-                conn, service, flush_sleep_s=args.debug_flush_sleep_ms / 1e3
+                conn, service,
+                flush_sleep_s=args.debug_flush_sleep_ms / 1e3,
+                fault_specs=fault_specs,
             )
     finally:
         sock.close()

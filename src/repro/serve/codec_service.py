@@ -156,6 +156,24 @@ class NotOwnedError(KeyError):
     corrupt payload."""
 
 
+class ChunkCorruptError(ValueError):
+    """A chunk's bytes failed their CRC at materialization time.
+
+    The chunk is QUARANTINED on this instance (marked for repair, rides
+    ``stats()['quarantine']``) instead of poisoning the payload forever:
+    the error fails only the queries that needed the body NOW, the fleet
+    frontend re-routes them to a replica that still holds a materialized
+    body, and a later :meth:`CodecService.refresh` — issued by the repair
+    controller once the file is fixed — clears the quarantine.  Carries
+    the repair target so controllers need not parse the message."""
+
+    def __init__(self, payload: str, chunk: int, path: str, reason: str):
+        super().__init__(reason)
+        self.payload = payload
+        self.chunk = chunk
+        self.path = path
+
+
 @dataclasses.dataclass
 class Ownership:
     """An instance's shard of one payload, installed by the fleet router.
@@ -200,6 +218,10 @@ class _CanaryState:
     window: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=32)
     )
+    #: detail of the most recent breach (fitness, worst_index, chunk,
+    #: entry range) — the repair controller's polling view of the same
+    #: facts the quality_breach event carries; None until a breach
+    last_breach: dict | None = None
 
     def rolling_fitness(self) -> float | None:
         return sum(self.window) / len(self.window) if self.window else None
@@ -210,6 +232,7 @@ class _CanaryState:
             "breaches": self.breaches,
             "last_fitness": self.last_fitness,
             "rolling_fitness": self.rolling_fitness(),
+            "last_breach": self.last_breach,
         }
 
 
@@ -241,6 +264,15 @@ class _StreamPayload:
     #: held-out ground truth from the container's TCDQ block; None for
     #: legacy files — those simply never canary
     heldout: container.HeldoutEntries | None = None
+    #: read-repair overlays from the container's TCDP block (empty for
+    #: unpatched files); the base payload is ``chunks[:n_base]``
+    patches: list[container.PatchEntry] = dataclasses.field(default_factory=list)
+    #: number of BASE (non-patch) chunks; None = every chunk is base
+    n_base: int | None = None
+    #: chunk id -> error message for chunks whose bytes failed their CRC —
+    #: set once at first failed read, cleared only by refresh(); rides
+    #: stats()["quarantine"] so the repair controller can find it
+    quarantine: dict[int, str] = dataclasses.field(default_factory=dict)
     #: in-flight background warm (prefetch): joined by _get before use
     warm: concurrent.futures.Future | None = None
     #: True after a background warm materialized the body: the NEXT counted
@@ -248,6 +280,76 @@ class _StreamPayload:
     #: also count a hit (keeps counters identical to the synchronous path,
     #: where materialization absorbs the first access)
     warm_credit: bool = False
+
+
+def _n_base(sp: _StreamPayload) -> int:
+    return sp.n_base if sp.n_base is not None else len(sp.chunks)
+
+
+def _hash_noise(flat: np.ndarray, sigma: float, seed: int) -> np.ndarray:
+    """Deterministic per-entry pseudo-noise in ``[-sigma, sigma)`` — a pure
+    function of (flat index, seed), so every replica injected with the same
+    spec serves the SAME degraded values regardless of batch composition."""
+    t = np.sin(flat.astype(np.float64) * 12.9898 + seed * 78.233) * 43758.5453
+    return (t - np.floor(t) - 0.5) * (2.0 * sigma)
+
+
+class _NoisyEncoded:
+    """DEBUG-ONLY decode-side fault (``inject_fault`` kind
+    ``fitness_noise``): wraps a materialized payload so served values
+    inside one flat entry range pick up deterministic seeded noise.  Every
+    decode path — direct, tiled, coalesced, and the canary's side decode —
+    funnels through ``decode_at``, so the fitness canary observes exactly
+    the degradation clients do.  The file and the payload bytes are
+    untouched: ``to_bytes`` delegates to the clean inner payload."""
+
+    def __init__(self, inner, entry_start: int, entry_stop: int,
+                 sigma: float, seed: int = 0):
+        self.inner = inner
+        self.entry_start = int(entry_start)
+        self.entry_stop = int(entry_stop)
+        self.sigma = float(sigma)
+        self.seed = int(seed)
+
+    @property
+    def shape(self):
+        return self.inner.shape
+
+    @property
+    def codec_name(self) -> str:
+        return self.inner.codec_name
+
+    def payload_bytes(self) -> int:
+        return self.inner.payload_bytes()
+
+    def cache_nbytes(self) -> int:
+        return self.inner.cache_nbytes()
+
+    def drop_caches(self) -> None:
+        self.inner.drop_caches()
+
+    def to_bytes(self) -> bytes:
+        return self.inner.to_bytes()
+
+    def decode_at(self, indices: np.ndarray) -> np.ndarray:
+        vals = np.asarray(self.inner.decode_at(indices))
+        idx = np.asarray(indices)
+        if idx.shape[0] == 0:
+            return vals
+        shape = tuple(int(s) for s in self.shape)
+        flat = np.ravel_multi_index(tuple(idx.T), shape)
+        mask = (flat >= self.entry_start) & (flat < self.entry_stop)
+        if not mask.any():
+            return vals
+        out = np.array(vals, dtype=np.float64)
+        out[mask] += _hash_noise(flat[mask], self.sigma, self.seed)
+        return out
+
+    def to_dense(self) -> np.ndarray:
+        x = np.array(self.inner.to_dense(), dtype=np.float64)
+        flat = np.arange(self.entry_start, self.entry_stop, dtype=np.int64)
+        x.reshape(-1)[flat] += _hash_noise(flat, self.sigma, self.seed)
+        return x
 
 
 class CodecService:
@@ -297,6 +399,9 @@ class CodecService:
         )
         self._enc_counters_seen: dict[str, tuple[int, int]] = {}
         self.cache_stats = CacheStats()
+        #: per-payload DEBUG faults installed by inject_fault(); cleared by
+        #: refresh().  {"corrupt_chunks": set[int], "noise": tuple | None}
+        self._faults: dict[str, dict] = {}
         self._queue: list[tuple[int, str, np.ndarray, int | None]] = []
         self._next_ticket = 0
         #: tickets whose payload group raised during the LAST flush,
@@ -340,6 +445,7 @@ class CodecService:
         sp = _StreamPayload(
             path, codec_name, chunks, view, tile_entries, body_nbytes,
             versions=oc.versions, heldout=oc.heldout,
+            patches=list(oc.patches), n_base=oc.n_base,
         )
         self._streams[name] = sp
         self._info[name] = PayloadInfo(
@@ -420,24 +526,83 @@ class CodecService:
                 self._info[name].cache_hits += 1
         return sp.enc
 
+    def _read_chunk_checked(
+        self, name: str, sp: _StreamPayload, cid: int
+    ) -> bytes:
+        """Materialize one chunk's bytes with the quarantine discipline: a
+        CRC/truncation failure (real, or injected via ``inject_fault``)
+        marks the chunk quarantined — recorded once, surfaced through
+        ``stats()['quarantine']``, fails fast on re-reads — and raises
+        :class:`ChunkCorruptError` so callers (and the fleet frontend) can
+        fail over to a replica instead of writing the payload off."""
+        prior = sp.quarantine.get(cid)
+        if prior is not None:
+            raise ChunkCorruptError(name, cid, sp.path, prior)
+        c = sp.chunks[cid]
+        try:
+            fault = self._faults.get(name)
+            if fault is not None and cid in fault["corrupt_chunks"]:
+                raise ValueError(
+                    f"{sp.path}: corrupt payload: chunk checksum mismatch "
+                    "(injected)"
+                )
+            return container.read_chunk(sp.view, c, ctx=f"{sp.path}: ")
+        except ValueError as e:
+            sp.quarantine[cid] = str(e)
+            obs.emit_event(
+                "chunk_quarantined",
+                payload=name,
+                chunk=cid,
+                path=sp.path,
+                entry_start=c.entry_start,
+                entry_stop=c.entry_stop,
+                error=str(e),
+            )
+            self.metrics.counter("chunks_quarantined", payload=name).inc()
+            raise ChunkCorruptError(name, cid, sp.path, str(e)) from e
+
     def _materialize(
         self, name: str, sp: _StreamPayload, pipelined: bool = True
     ) -> None:
         """Read + parse a lazy payload body (counted as one miss, exactly
-        like the pre-warm era).  ``pipelined=False`` reads chunks inline —
-        required when already ON the single prefetch thread (the warm
-        path), where submitting to the pool and waiting would deadlock."""
+        like the pre-warm era).  Only BASE chunks form the body; TCDP patch
+        overlays are materialized separately and wrapped around it, so
+        every decode path sees repaired ranges automatically.  A chunk that
+        fails its CRC is quarantined (see ``_read_chunk_checked``) instead
+        of poisoning the payload.  ``pipelined=False`` reads chunks
+        inline — required when already ON the single prefetch thread (the
+        warm path), where submitting to the pool and waiting would
+        deadlock."""
         self.cache_stats.miss(name)
         self._info[name].cache_misses += 1
-        with obs.span("materialize", payload=name, chunks=len(sp.chunks)):
-            with obs.span("chunk_read", payload=name, chunks=len(sp.chunks)):
+        nb = _n_base(sp)
+        with obs.span("materialize", payload=name, chunks=nb):
+            with obs.span("chunk_read", payload=name, chunks=nb):
                 reads = (
-                    self._read_chunks(sp)
+                    self._read_chunks(name, sp)
                     if pipelined
-                    else [container.read_chunk(sp.view, c) for c in sp.chunks]
+                    else [
+                        self._read_chunk_checked(name, sp, i)
+                        for i in range(nb)
+                    ]
                 )
                 body = b"".join(reads)
-            sp.enc = codecs.get_codec(sp.codec).encoded_cls.from_bytes(body)
+            enc = codecs.get_codec(sp.codec).encoded_cls.from_bytes(body)
+            if sp.patches:
+                overlays = []
+                for p in sp.patches:
+                    pbody = b"".join(
+                        self._read_chunk_checked(name, sp, i)
+                        for i in range(p.chunk_start, p.chunk_stop)
+                    )
+                    overlays.append(
+                        (p, codecs.get_codec(p.codec).encoded_cls.from_bytes(pbody))
+                    )
+                enc = container.PatchedEncoded(enc, overlays)
+            fault = self._faults.get(name)
+            if fault is not None and fault.get("noise") is not None:
+                enc = _NoisyEncoded(enc, *fault["noise"])
+            sp.enc = enc
         self._info[name].payload_bytes = sp.enc.payload_bytes()
 
     def _warm_stream(self, name: str, sp: _StreamPayload) -> None:
@@ -506,8 +671,8 @@ class CodecService:
                     chunks=ve.chunk_stop - ve.chunk_start,
                 ):
                     body = b"".join(
-                        container.read_chunk(sp.view, c)
-                        for c in sp.chunks[ve.chunk_start : ve.chunk_stop]
+                        self._read_chunk_checked(name, sp, i)
+                        for i in range(ve.chunk_start, ve.chunk_stop)
                     )
                 enc = codecs.get_codec(sp.codec).encoded_cls.from_bytes(body)
             sp.vencs[v] = enc
@@ -646,14 +811,18 @@ class CodecService:
             )
         return self._prefetch_pool
 
-    def _read_chunks(self, sp: _StreamPayload) -> list[bytes]:
-        """Chunk bytes in index order.  With prefetch, reads run ahead on
-        the background thread (page-in + CRC drop the GIL) while the main
-        thread copies earlier chunks into the joined body."""
+    def _read_chunks(self, name: str, sp: _StreamPayload) -> list[bytes]:
+        """BASE-chunk bytes in index order.  With prefetch, reads run ahead
+        on the background thread (page-in + CRC drop the GIL) while the
+        main thread copies earlier chunks into the joined body."""
+        nb = _n_base(sp)
         pool = self._pool()
-        if pool is None or len(sp.chunks) < 2:
-            return [container.read_chunk(sp.view, c) for c in sp.chunks]
-        futs = [pool.submit(container.read_chunk, sp.view, c) for c in sp.chunks]
+        if pool is None or nb < 2:
+            return [self._read_chunk_checked(name, sp, i) for i in range(nb)]
+        futs = [
+            pool.submit(self._read_chunk_checked, name, sp, i)
+            for i in range(nb)
+        ]
         return [f.result() for f in futs]
 
     # ------------------------------------------------------------- ownership
@@ -722,6 +891,182 @@ class CodecService:
         self._cache_put(("tile", name, int(tid)),
                         _CacheEntry(int(values.nbytes), values))
         return True
+
+    # ---------------------------------------------------------------- repair
+    def inject_fault(self, name: str, fault: dict) -> None:
+        """DEBUG-ONLY fault injection — the single surface behind the
+        worker ``--debug-corrupt-chunk`` / ``--debug-fitness-noise`` flags
+        and the pytest ``fault_injector`` fixture, so the CI drill and the
+        unit tests exercise the exact failure path the repair controller
+        fixes.
+
+        ``fault["kind"]``:
+
+        - ``"corrupt_chunk"`` (``chunk``): the named chunk's next read
+          fails its CRC exactly as if the bytes rotted on disk — the chunk
+          quarantines and queries needing the body raise
+          :class:`ChunkCorruptError`;
+        - ``"fitness_noise"`` (``entry_start``, ``entry_stop``, ``sigma``,
+          optional ``seed``): served values inside the flat range pick up
+          deterministic seeded noise, degrading canary fitness without
+          touching the file.
+
+        Cached bodies and tiles for the payload are dropped so the fault
+        takes effect on the very next decode; :meth:`refresh` clears every
+        installed fault."""
+        sp = self._streams.get(name)
+        if sp is None:
+            raise KeyError(f"no stream payload {name!r}")
+        kind = fault.get("kind")
+        spec = self._faults.setdefault(
+            name, {"corrupt_chunks": set(), "noise": None}
+        )
+        if kind == "corrupt_chunk":
+            cid = int(fault["chunk"])
+            if not 0 <= cid < len(sp.chunks):
+                raise ValueError(f"{name}: chunk {cid} out of range")
+            spec["corrupt_chunks"].add(cid)
+        elif kind == "fitness_noise":
+            spec["noise"] = (
+                int(fault["entry_start"]),
+                int(fault["entry_stop"]),
+                float(fault["sigma"]),
+                int(fault.get("seed", 0)),
+            )
+        else:
+            raise ValueError(f"unknown fault kind {kind!r}")
+        # join an in-flight background warm first: it may otherwise finish
+        # AFTER the state drop below and resurrect a pre-fault body
+        if sp.warm is not None:
+            warm, sp.warm = sp.warm, None
+            with contextlib.suppress(Exception):
+                warm.result()
+        sp.warm_credit = False
+        self._drop_named_cache_entries(name)
+        if sp.enc is not None:
+            sp.enc.drop_caches()
+            sp.enc = None
+        sp.vencs.clear()
+
+    def refresh(self, name: str) -> PayloadInfo:
+        """Re-open a lazy payload's container file in place — the repair
+        controller's epoch switch after it rewrote chunks or appended a
+        patch.  Preserves the ownership filter and the cumulative
+        ``PayloadInfo`` counters; clears quarantine marks, injected debug
+        faults, per-payload canary state (the fitness gauge restarts clean
+        for the repaired epoch), and every cached body/tile so the next
+        decode re-reads the repaired bytes."""
+        sp = self._streams.get(name)
+        if sp is None:
+            raise KeyError(f"no stream payload {name!r}")
+        old = self._info[name]
+        ownership, tile_entries, path = sp.ownership, sp.tile_entries, sp.path
+        if sp.warm is not None:
+            warm, sp.warm = sp.warm, None
+            with contextlib.suppress(Exception):
+                warm.result()
+        self._faults.pop(name, None)
+        self._canary.pop(name, None)
+        self._canary_calls.pop(name, None)
+        self._drop_named_cache_entries(name)
+        self._streams.pop(name, None)
+        sp.view.release()
+        self.load_stream(name, path, tile_entries=tile_entries)
+        nsp = self._streams[name]
+        nsp.ownership = ownership
+        info = self._info[name]
+        info.requests = old.requests
+        info.entries_decoded = old.entries_decoded
+        info.decode_calls = old.decode_calls
+        info.cache_hits = old.cache_hits
+        info.cache_misses = old.cache_misses
+        obs.emit_event("payload_refreshed", payload=name, path=path)
+        return info
+
+    def export_chunk(self, name: str, chunk: int) -> bytes | None:
+        """Exact bytes of one chunk, reconstructed from this instance's
+        MATERIALIZED body — never from the file, whose copy of the chunk
+        may be the corrupt one under repair.  ``Encoded.to_bytes`` is a
+        bit-exact round trip, so slicing the re-serialized body at the
+        footer's chunk spans reproduces the originally written bytes.
+
+        Returns ``None`` when this instance cannot vouch for the bytes:
+        the chunk is quarantined here, the body is not materializable
+        (ownership filter, or its own chunks are corrupt), or the slice
+        fails the footer CRC.  A non-``None`` return IS CRC-verified
+        against the footer entry, so the repair controller can splice it
+        into a damaged replica's file sight unseen."""
+        sp = self._streams.get(name)
+        if sp is None:
+            raise KeyError(f"no stream payload {name!r}")
+        chunk = int(chunk)
+        if not 0 <= chunk < len(sp.chunks):
+            raise ValueError(f"{name}: chunk {chunk} out of range")
+        if chunk in sp.quarantine:
+            return None
+        try:
+            if sp.versions is not None:
+                raw = self._export_version_chunk(name, sp, chunk)
+            else:
+                raw = self._export_single_chunk(name, sp, chunk)
+        except (ChunkCorruptError, NotOwnedError):
+            return None
+        if raw is None:
+            return None
+        c = sp.chunks[chunk]
+        if len(raw) != c.length or zlib.crc32(raw) & 0xFFFFFFFF != c.crc:
+            return None
+        return raw
+
+    def _export_single_chunk(
+        self, name: str, sp: _StreamPayload, chunk: int
+    ) -> bytes | None:
+        enc = self._get(name, count=False)
+        self._account_decode_state(name, enc)
+        while isinstance(enc, _NoisyEncoded):  # noise is decode-side only
+            enc = enc.inner
+        nb = _n_base(sp)
+        if chunk < nb:
+            base = enc.base if isinstance(enc, container.PatchedEncoded) else enc
+            body = base.to_bytes()
+            off = sum(sp.chunks[i].length for i in range(chunk))
+            return body[off : off + sp.chunks[chunk].length]
+        if not isinstance(enc, container.PatchedEncoded):
+            return None
+        for p, oenc in enc.overlays:
+            if p.chunk_start <= chunk < p.chunk_stop:
+                body = oenc.to_bytes()
+                off = sum(
+                    sp.chunks[i].length for i in range(p.chunk_start, chunk)
+                )
+                return body[off : off + sp.chunks[chunk].length]
+        return None
+
+    def _export_version_chunk(
+        self, name: str, sp: _StreamPayload, chunk: int
+    ) -> bytes | None:
+        for v, ve in enumerate(sp.versions):
+            if ve.chunk_start <= chunk < ve.chunk_stop:
+                enc = self._get_component(name, sp, v, count=False)
+                self._account_version_state(name, sp, v, enc)
+                body = enc.to_bytes()
+                off = sum(
+                    sp.chunks[i].length for i in range(ve.chunk_start, chunk)
+                )
+                return body[off : off + sp.chunks[chunk].length]
+        return None
+
+    def quarantine_stats(self) -> dict:
+        """Payload name -> {chunk id -> error} for every quarantined chunk;
+        empty when healthy.  Rides ``stats()`` so the fleet repair
+        controller discovers corruption through the same wire poll as
+        canary breaches.  (JSON transports stringify the chunk-id keys —
+        consumers normalize with ``int``.)"""
+        return {
+            name: {int(cid): err for cid, err in sorted(sp.quarantine.items())}
+            for name, sp in self._streams.items()
+            if sp.quarantine
+        }
 
     # ----------------------------------------------------------------- cache
     def _drop_named_cache_entries(self, name: str) -> None:
@@ -962,6 +1307,14 @@ class CodecService:
             self.metrics.counter("canary_breaches", payload=name).inc()
             worst = int(idx[int(np.argmax(np.abs(err)))])
             chunk, lo, hi = self._chunk_of_entry(sp, worst)
+            st.last_breach = {
+                "fitness": fitness,
+                "threshold": float(self.canary_min_fitness),
+                "worst_index": worst,
+                "chunk": chunk,
+                "entry_start": lo,
+                "entry_stop": hi,
+            }
             obs.emit_event(
                 "quality_breach",
                 payload=name,
@@ -977,10 +1330,11 @@ class CodecService:
     def _chunk_of_entry(
         sp: _StreamPayload, flat: int
     ) -> tuple[int | None, int | None, int | None]:
-        """The chunk whose footer entry range routes ``flat`` — names the
-        repair target for a quality breach.  (None, None, None) when the
-        file carries no entry ranges."""
-        for i, c in enumerate(sp.chunks):
+        """The BASE chunk whose footer entry range routes ``flat`` — names
+        the repair target for a quality breach (patch chunks also carry
+        ranges but base chunks are the stable repair address).  (None,
+        None, None) when the file carries no entry ranges."""
+        for i, c in enumerate(sp.chunks[: _n_base(sp)]):
             if (
                 c.entry_start is not None
                 and c.entry_start <= flat < c.entry_stop
@@ -995,10 +1349,12 @@ class CodecService:
 
     def stats(self) -> dict:
         """Full JSON-able instance snapshot: the cache-stats wire schema
-        plus a ``canary`` sub-dict.  Additive over ``cache_stats.as_dict``
-        so old consumers of the transport stats blob keep working."""
+        plus ``canary`` and ``quarantine`` sub-dicts.  Additive over
+        ``cache_stats.as_dict`` so old consumers of the transport stats
+        blob keep working."""
         out = self.cache_stats.as_dict()
         out["canary"] = self.canary_stats()
+        out["quarantine"] = self.quarantine_stats()
         return out
 
     # --------------------------------------------------------------- batched

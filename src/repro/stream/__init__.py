@@ -31,10 +31,18 @@ from repro.stream.source import (
     SyntheticTensorSource,
     write_tensor_file,
 )
-from repro.stream.writer import ChunkedWriter, sample_heldout, write_chunked
+from repro.stream.writer import (
+    ChunkedWriter,
+    append_patch,
+    rewrite_chunks,
+    sample_heldout,
+    write_chunked,
+)
 
 __all__ = [
     "ChunkedWriter",
+    "append_patch",
+    "rewrite_chunks",
     "DenseSource",
     "MMapTensorSource",
     "NTTDStreamFitter",

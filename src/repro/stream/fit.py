@@ -6,9 +6,11 @@ dispatches to the named codec's ``stream_fitter``:
   * NTTD — warm-started minibatch SGD (paper §IV-B Alg. 2) over arriving
     slabs.  Each slab trains a few scan-jitted Adam steps whose batches
     mix fresh slab entries with a seeded reservoir replay buffer, so early
-    slabs are not forgotten once they leave memory.  Mode orderings stay
-    identity (the TSP init needs the full tensor); normalization constants
-    are frozen from the first slab.
+    slabs are not forgotten once they leave memory.  Mode orderings start
+    identity (the TSP init needs the full tensor); ``refine_orders``
+    optionally recomputes them mid-stream from the reservoir sample (or a
+    caller-provided dense estimate) — the read-repair refit path uses
+    this.  Normalization constants are frozen from the first slab.
   * TT — a TT-ICE-style update (Aksoy et al., *An Incremental Tensor
     Train Decomposition Algorithm*): an orthonormal row-space basis is
     expanded by each slab's residual directions (rank-capped), and
@@ -85,6 +87,12 @@ class NTTDStreamFitter(StreamFitter):
         self.slabs_seen = 0
         self._mean: float | None = None
         self._std = 1.0
+        #: per-mode orders (pi[k][pos] = original index); identity until a
+        #: refine_orders call installs TSP-derived ones.  _inv is the lazy
+        #: original->position map, None while orders are still identity so
+        #: the common path pays no gather.
+        self.orders = reorder.identity_orders(self.shape)
+        self._inv: list[np.ndarray] | None = None
 
     def update(self, indices: np.ndarray, values: np.ndarray) -> None:
         idx = np.asarray(indices, dtype=np.int64)
@@ -94,6 +102,13 @@ class NTTDStreamFitter(StreamFitter):
                 f"slab must be indices [B, {len(self.shape)}] + values [B], "
                 f"got {idx.shape} / {vals.shape}"
             )
+        if self._inv is not None:
+            # train in POSITION space (X_pi(pos) = X(pi(pos)), the same
+            # convention core/codec.py uses); decode maps back via inv_pi
+            pos_idx = np.empty_like(idx)
+            for j in range(idx.shape[1]):
+                pos_idx[:, j] = self._inv[j][idx[:, j]]
+            idx = pos_idx
         if self._mean is None:
             # frozen first-slab estimate: a streaming fit cannot see global
             # stats up front, and re-normalizing mid-stream would shift the
@@ -156,12 +171,54 @@ class NTTDStreamFitter(StreamFitter):
                 reservoir_capacity=int(self._rval.shape[0]),
             )
 
+    def _reservoir_orig(self) -> np.ndarray:
+        """Reservoir positions mapped back to ORIGINAL indices [fill, d]."""
+        rpos = self._rpos[: self._rfill]
+        if self._inv is None:
+            return rpos
+        return np.stack(
+            [self.orders[j][rpos[:, j]] for j in range(len(self.shape))], axis=1
+        )
+
+    def refine_orders(self, x: np.ndarray | None = None) -> list[np.ndarray]:
+        """Mid-stream TSP mode-order refinement (paper §IV-D, made
+        streaming-feasible): recompute per-mode orders from a dense
+        estimate — the caller's tensor when given, else a zero-filled
+        densification of the reservoir sample — remap the reservoir into
+        the new position space, and reinitialize the optimizer (the paper
+        reinits Adam after every reorder).  Parameters are KEPT: training
+        continues warm against the re-permuted targets, which is the
+        read-repair refit's whole point."""
+        if x is None:
+            if not self._rfill:
+                raise ValueError("empty reservoir: nothing to refine orders from")
+            est = np.zeros(self.shape, dtype=np.float32)
+            est[tuple(self._reservoir_orig().T)] = self._rval[: self._rfill]
+        else:
+            est = np.asarray(x, dtype=np.float32)
+            if est.shape != self.shape:
+                raise ValueError(
+                    f"order-refinement tensor shape {est.shape} != {self.shape}"
+                )
+            # normalization is affine: slice distances (hence TSP orders)
+            # are unchanged, but stay consistent with the reservoir path
+            est = (est - (self._mean or 0.0)) / self._std
+        orig = self._reservoir_orig() if self._rfill else None
+        new = [reorder.tsp_order_mode(est, k) for k in range(est.ndim)]
+        new_inv = [np.argsort(p) for p in new]
+        if orig is not None:
+            for j in range(len(self.shape)):
+                self._rpos[: self._rfill, j] = new_inv[j][orig[:, j]]
+        self.orders, self._inv = new, new_inv
+        self._opt_state = self._opt.init(self.params)
+        return new
+
     def finalize(self) -> Encoded:
         from repro.codecs.adapters import NTTDEncoded
 
         ct = codec_lib.CompressedTensor(
             jax.tree.map(np.asarray, self.params),
-            reorder.identity_orders(self.shape),
+            [np.asarray(p) for p in self.orders],
             self.spec,
             self.cfg,
             self._mean or 0.0,

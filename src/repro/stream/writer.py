@@ -34,6 +34,8 @@ working.
 """
 from __future__ import annotations
 
+import dataclasses
+import struct
 import zlib
 
 import numpy as np
@@ -279,6 +281,131 @@ def write_chunked(
                 entry_range=(lo, hi) if hi > lo else None,
             )
         return w.close()
+
+
+def _sealed_state(path: str):
+    """Parse a sealed chunked file for mutation: footer contents plus the
+    data end (where the footer starts) so a rewrite can truncate-and-reseal
+    exactly the way ``ChunkedWriter._unseal``/``sync`` do."""
+    oc = container.open_container(path)
+    try:
+        if not (oc.flags & container.FLAG_CHUNKED):
+            raise ValueError(f"{path}: monolithic container cannot be rewritten")
+        state = (oc.codec, list(oc.chunks), oc.versions, oc.heldout,
+                 list(oc.patches))
+    finally:
+        oc.close()
+    with open(path, "rb") as f:
+        f.seek(-container._TRAILER_LEN, 2)
+        trailer_at = f.tell()
+        (footer_len,) = struct.unpack("<Q", f.read(8))
+    return (*state, trailer_at - footer_len)
+
+
+def rewrite_chunks(path: str, replacements: dict[int, bytes]) -> None:
+    """Replace named chunks' BYTES in a sealed chunked file, in place.
+
+    The read-repair swap primitive: a same-length replacement (the exact
+    restore of a corrupt chunk from a replica's materialized body) is
+    written at the chunk's original offset — every other byte of the file,
+    footer included, is preserved verbatim.  A different-length replacement
+    is appended at the data end and the chunk's index entry re-pointed
+    (its id, entry range, and position in the footer never change, so
+    routing tables stay valid); the old bytes become an unreferenced hole.
+    Either way the footer is truncated and resealed, so a crash mid-rewrite
+    leaves a file that is cleanly rejected, never silently half-patched.
+    Live mmap readers keep their parsed index: same-length rewrites become
+    visible to them byte-for-byte, relocations stay invisible until they
+    re-open — both consistent states, which is what lets a fleet swap a
+    repaired chunk under traffic (``repro.fleet.repair``).
+    """
+    if not replacements:
+        return
+    codec, chunks, versions, heldout, patches, data_end = _sealed_state(path)
+    for cid in replacements:
+        if not 0 <= cid < len(chunks):
+            raise ValueError(f"{path}: no chunk {cid} to rewrite")
+        if not replacements[cid]:
+            raise ValueError(f"{path}: empty replacement for chunk {cid}")
+    with open(path, "r+b") as f:
+        f.seek(data_end)
+        f.truncate()  # unseal: drop the footer before mutating the index
+        end = data_end
+        for cid in sorted(replacements):
+            raw = replacements[cid]
+            c = chunks[cid]
+            crc = zlib.crc32(raw) & 0xFFFFFFFF
+            if len(raw) == c.length:
+                f.seek(c.offset)
+                f.write(raw)
+                chunks[cid] = dataclasses.replace(c, crc=crc)
+            else:
+                f.seek(end)
+                f.write(raw)
+                chunks[cid] = container.ChunkEntry(
+                    end, len(raw), crc, c.entry_start, c.entry_stop
+                )
+                end += len(raw)
+        f.seek(end)
+        f.write(container.pack_footer(chunks, versions, heldout, patches))
+        f.flush()
+
+
+def append_patch(
+    path: str,
+    body: bytes,
+    entry_range: tuple[int, int],
+    codec_name: str,
+    chunk_bytes: int = 1 << 20,
+) -> int:
+    """Append a read-repair overlay to a sealed v3 file; returns its patch
+    index in the ``TCDP`` block.
+
+    ``body`` is the overlay payload's ``Encoded.to_bytes()`` — a
+    stand-alone tensor holding exactly ``entry_stop - entry_start``
+    entries whose decode REPLACES the base payload over ``entry_range``
+    (see ``container.PatchEntry``).  The overlay's chunks join the chunk
+    index as a suffix; base chunks are not touched, which is the whole
+    point: untouched entry ranges keep decoding bit-identically after the
+    repair.  Delta (v4) containers are rejected — repairing a version
+    chain goes through exact chunk restore (``rewrite_chunks``), never an
+    overlay.
+    """
+    lo, hi = int(entry_range[0]), int(entry_range[1])
+    if not 0 <= lo < hi:
+        raise ValueError(f"{path}: bad patch entry_range ({lo}, {hi})")
+    if not body:
+        raise ValueError(f"{path}: empty patch body")
+    if chunk_bytes <= 0:
+        raise ValueError(f"chunk_bytes must be positive, got {chunk_bytes}")
+    codec, chunks, versions, heldout, patches, data_end = _sealed_state(path)
+    if versions is not None:
+        raise ValueError(f"{path}: cannot patch a delta container")
+    n_base = container.patch_base_count(len(chunks), patches)
+    stops = [c.entry_stop for c in chunks[:n_base] if c.entry_stop is not None]
+    if stops and hi > max(stops):
+        raise ValueError(
+            f"{path}: patch entry_range ({lo}, {hi}) exceeds the payload's "
+            f"{max(stops)} entries"
+        )
+    with open(path, "r+b") as f:
+        f.seek(data_end)
+        f.truncate()
+        cstart = len(chunks)
+        off = data_end
+        for at in range(0, len(body), chunk_bytes):
+            raw = body[at : at + chunk_bytes]
+            f.write(raw)
+            chunks.append(container.ChunkEntry(
+                off, len(raw), zlib.crc32(raw) & 0xFFFFFFFF, lo, hi
+            ))
+            off += len(raw)
+        patches.append(container.PatchEntry(
+            lo, hi, cstart, len(chunks), codec_name
+        ))
+        f.write(container.pack_footer(chunks, versions, heldout, patches))
+        f.flush()
+    return len(patches) - 1
 
 
 def sample_heldout(

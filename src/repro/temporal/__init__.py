@@ -29,13 +29,15 @@ from repro.temporal.delta import (
     resolve_chain,
 )
 from repro.temporal.drift import drifting_versions
-from repro.temporal.store import VersionedStore
+from repro.temporal.store import ChainHealth, VersionedStore, revalidate_chains
 
 __all__ = [
     "ChainEncoded",
+    "ChainHealth",
     "DeltaFitter",
     "VersionedStore",
     "drifting_versions",
     "load_chain",
     "resolve_chain",
+    "revalidate_chains",
 ]

@@ -20,6 +20,8 @@ the checkpoint durability story.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro import obs
@@ -165,6 +167,51 @@ def _fitness(x: np.ndarray, hat: np.ndarray) -> float:
     x64 = np.asarray(x, np.float64)
     err = float(np.linalg.norm(x64 - hat))
     return 1.0 - err / max(float(np.linalg.norm(x64)), 1e-30)
+
+
+@dataclasses.dataclass
+class ChainHealth:
+    """One version's post-repair verdict from :func:`revalidate_chains`."""
+
+    version: int
+    #: keyframe-to-version decode chain (resolve_chain order)
+    chain: list[int]
+    #: every chunk CRC on the chain passed and the decode is finite
+    ok: bool
+    error: str | None = None
+    #: chain fitness against caller-provided truth (None without truth)
+    fitness: float | None = None
+
+
+def revalidate_chains(
+    path: str, truth: dict[int, np.ndarray] | None = None
+) -> list[ChainHealth]:
+    """Re-validate every version chain of a v4 delta file — the repair
+    controller's post-repair step for versioned payloads.
+
+    Repairing a keyframe's chunks changes bytes that EVERY dependent
+    residual decodes through, so a byte restore is not done until each
+    chain re-reads clean (chunk CRCs) and decodes to finite values.  Pass
+    ``truth`` (version -> dense original tensor, any subset) to also
+    re-measure chain fitness the way the writer's ``rekey_below`` gate
+    did at append time.
+    """
+    out: list[ChainHealth] = []
+    with VersionedReader(path) as reader:
+        for v in range(reader.n_versions):
+            chain = resolve_chain(reader.versions, v)
+            try:
+                hat = reader.decode(v)
+                if not np.all(np.isfinite(hat)):
+                    raise ValueError(f"version {v}: non-finite chain decode")
+            except ValueError as e:
+                out.append(ChainHealth(v, chain, ok=False, error=str(e)))
+                continue
+            fit = None
+            if truth is not None and v in truth:
+                fit = _fitness(np.asarray(truth[v]), hat.astype(np.float64))
+            out.append(ChainHealth(v, chain, ok=True, fitness=fit))
+    return out
 
 
 class VersionedReader:

@@ -6,6 +6,32 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
+import pytest
+
+
+@pytest.fixture
+def fault_injector():
+    """Install worker-CLI-style fault specs on a transport or service.
+
+    Specs use the EXACT ``--debug-corrupt-chunk NAME:CHUNK`` /
+    ``--debug-fitness-noise NAME:LO:HI:SIGMA[:SEED]`` grammar the worker
+    process parses (``repro.fleet.worker.parse_fault_flags``) and are
+    applied through the same ``inject_fault`` verb the wire protocol
+    exposes — one injection surface shared by the CI repair drill
+    (scripts/repair_drill.py), the SLO drill, and the unit tests.
+    """
+    from repro.fleet.worker import parse_fault_flags
+
+    def install(target, *, corrupt=None, noise=None):
+        specs = parse_fault_flags(corrupt, noise)
+        for name, faults in specs.items():
+            for fault in faults:
+                target.inject_fault(name, fault)
+        return specs
+
+    return install
+
+
 def pytest_configure(config):
     # mirror pyproject [tool.pytest.ini_options] so the marker stays
     # registered even when pytest is pointed somewhere without the rootdir

@@ -1,0 +1,543 @@
+"""Replica-aware read repair: RepairController unit/integration suite.
+
+Covers the repair loop below the CI drill (scripts/repair_drill.py):
+
+- corruption repair restores a quarantined chunk byte-exactly from a
+  donor replica while answers stay bit-identical throughout;
+- quality repair re-compresses a breached range online and the repaired
+  held-out fitness recovers to within epsilon of the pre-corruption
+  payload — on LocalTransport AND on real socket workers spawned with
+  the ``--debug-fitness-noise`` CLI flag;
+- repairing a keyframe chunk of a v4 delta file re-validates every
+  dependent version chain (``repro.temporal.revalidate_chains``);
+- poll() dedup, the ``_range_shape`` factoring helpers, and the
+  mid-stream ``refine_orders`` hook of the NTTD stream fitter.
+"""
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.codecs import container
+from repro.codecs.base import get_codec
+from repro.codecs.indexing import flat_to_multi
+from repro.fleet import (
+    FleetFrontend,
+    RepairConfig,
+    RepairController,
+    SocketTransport,
+)
+from repro.fleet.repair import _nearest_divisor, _range_shape
+from repro.serve.codec_service import CodecService
+from repro.stream import sample_heldout, write_chunked
+from repro.stream.fit import NTTDStreamFitter
+from repro.temporal import VersionedStore, drifting_versions, revalidate_chains
+from repro.temporal.store import _fitness
+
+SHAPE = (16, 12, 8)
+CANARY_MIN_FITNESS = 0.95
+
+
+def _truth() -> np.ndarray:
+    # genuinely low-TT-rank (separable harmonics): the base fit is
+    # near-exact, so any fitness regression the tests see is injected
+    i, j, k = np.meshgrid(*[np.arange(s) for s in SHAPE], indexing="ij")
+    return (
+        np.sin(0.3 * i) * np.cos(0.2 * j) * np.sin(0.15 * k)
+        + 0.5 * np.cos(0.1 * i) * np.sin(0.25 * j) * np.cos(0.3 * k)
+    ).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def pristine(tmp_path_factory):
+    """(path, truth) for a chunked ttd payload with a held-out block."""
+    x = _truth()
+    enc = get_codec("ttd").fit(x, max_rank=4)
+    path = str(tmp_path_factory.mktemp("repair") / "pristine.tcdc")
+    write_chunked(path, enc, chunk_bytes=1024,
+                  heldout=sample_heldout(x, 128, seed=3))
+    return path, x
+
+
+@pytest.fixture
+def payload(pristine, tmp_path):
+    """A per-test copy — repairs mutate the file (rewrite/append)."""
+    src, x = pristine
+    path = str(tmp_path / "payload.tcdc")
+    shutil.copyfile(src, path)
+    return path, x
+
+
+def _batches(n=4, per=400):
+    rng = np.random.default_rng(2)
+    return [
+        np.stack([rng.integers(0, s, per) for s in SHAPE], axis=1)
+        for _ in range(n)
+    ]
+
+
+def _chunk_range(path: str, cid: int) -> tuple[int, int]:
+    _, chunks, _ = container.container_index(path)
+    return int(chunks[cid].entry_start), int(chunks[cid].entry_stop)
+
+
+def _heldout_fitness(path: str, svc: CodecService, name: str) -> float:
+    """Held-out fitness of the payload as currently served."""
+    oc = container.open_container(path)
+    try:
+        h_idx, h_vals = oc.heldout.indices.copy(), oc.heldout.values.copy()
+    finally:
+        oc.close()
+    hat = svc.decode_at(name, flat_to_multi(h_idx, SHAPE))
+    return _fitness(h_vals, np.asarray(hat, np.float64))
+
+
+# ---------------------------------------------------------------- corruption
+class TestCorruptionRepair:
+    def test_restore_from_donor_bit_identical(self, payload, fault_injector):
+        path, _ = payload
+        single = CodecService()
+        single.load_stream("e", path, tile_entries=256)
+        batches = _batches()
+        reference = [single.decode_at("e", idx) for idx in batches]
+
+        fleet = FleetFrontend(["i0", "i1", "i2"], replication=2)
+        try:
+            fleet.load_stream("e", path, tile_entries=256)
+            route = fleet.routes["e"]
+            lo, _hi = _chunk_range(path, 1)
+            # corrupt the chunk on its PRIMARY owner so drill traffic is
+            # guaranteed to hit the fault and fail over to the replica
+            gid = int(route.group_of(np.array([lo], dtype=np.int64))[0])
+            victim = fleet._group_owners["e"][gid][0]
+            fault_injector(fleet.transports[victim], corrupt=["e:1"])
+
+            def serve_round():
+                for k, idx in enumerate(batches):
+                    out = fleet.decode_at("e", idx)
+                    assert np.array_equal(out, reference[k]), f"batch {k}"
+                assert not fleet.failed, fleet.failed
+
+            serve_round()  # bit-identical THROUGH the corruption (failover)
+            ctl = RepairController(fleet)
+            tickets = ctl.poll()
+            corrupt = [t for t in tickets if t.kind == "corruption"]
+            assert corrupt and corrupt[0].chunk == 1
+            assert corrupt[0].payload == "e"
+            assert (corrupt[0].entry_start, corrupt[0].entry_stop) == \
+                _chunk_range(path, 1)
+
+            reports = ctl.run()
+            assert all(r.ok for r in reports), [r.error for r in reports]
+            restore = next(r for r in reports if r.kind == "corruption")
+            assert restore.chunks_restored == [1]
+            assert restore.donors[1] != victim
+
+            serve_round()  # bit-identical AFTER the swap
+            assert not ctl.poll(), "tickets remain after repair"
+            for iid, t in fleet.transports.items():
+                assert not t.stats().get("quarantine"), iid
+        finally:
+            fleet.close()
+
+    def test_no_donor_fails_cleanly(self, payload, fault_injector):
+        """Every replica quarantined -> the repair reports failure instead
+        of corrupting the file with unvouched bytes."""
+        path, _ = payload
+        fleet = FleetFrontend(["i0", "i1"], replication=2)
+        try:
+            fleet.load_stream("e", path, tile_entries=256)
+            lo, hi = _chunk_range(path, 1)
+            idx = flat_to_multi(np.arange(lo, hi, dtype=np.int64), SHAPE)
+            for iid in ("i0", "i1"):
+                fault_injector(fleet.transports[iid], corrupt=["e:1"])
+                with pytest.raises(ValueError):
+                    fleet.services[iid].decode_at("e", idx)
+            ctl = RepairController(fleet)
+            [report] = ctl.run()
+            assert not report.ok
+            assert "no live replica" in report.error
+        finally:
+            fleet.close()
+
+    def test_poll_dedup_across_replicas(self, payload, fault_injector):
+        """R replicas reporting the same damaged chunk is ONE ticket."""
+        path, _ = payload
+        fleet = FleetFrontend(["i0", "i1"], replication=2)
+        try:
+            fleet.load_stream("e", path, tile_entries=256)
+            lo, hi = _chunk_range(path, 1)
+            idx = flat_to_multi(np.arange(lo, hi, dtype=np.int64), SHAPE)
+            for iid in ("i0", "i1"):
+                fault_injector(fleet.transports[iid], corrupt=["e:1"])
+                with pytest.raises(ValueError):
+                    fleet.services[iid].decode_at("e", idx)
+                assert fleet.transports[iid].stats()["quarantine"], iid
+            tickets = RepairController(fleet).poll()
+            assert len(tickets) == 1, tickets
+            assert tickets[0].kind == "corruption" and tickets[0].chunk == 1
+        finally:
+            fleet.close()
+
+
+# ------------------------------------------------------------------- quality
+class TestQualityRepair:
+    def test_refit_recovers_precorruption_fitness(self, payload, fault_injector):
+        """Direct repair_quality round-trip: decode-tile densify + held-out
+        overlay + NTTD refit (with mid-stream order refinement) must bring
+        held-out fitness back to within epsilon of the pre-corruption
+        payload, and leave untouched entries bit-identical."""
+        path, x = payload
+        single = CodecService()
+        single.load_stream("e", path, tile_entries=256)
+        pre_fitness = _heldout_fitness(path, single, "e")
+        assert pre_fitness > 0.999  # the base fit is near-exact
+
+        fleet = FleetFrontend(["i0", "i1"], replication=2)
+        try:
+            fleet.load_stream("e", path, tile_entries=256)
+            lo, hi = _chunk_range(path, 1)
+            noise = [f"e:{lo}:{hi}:0.4:5"]
+            for t in fleet.transports.values():
+                fault_injector(t, noise=noise)
+
+            all_idx = flat_to_multi(
+                np.arange(int(np.prod(SHAPE)), dtype=np.int64), SHAPE
+            )
+            outside = (np.arange(len(all_idx)) < lo) | (np.arange(len(all_idx)) >= hi)
+            ref_outside = single.decode_at("e", all_idx[outside])
+
+            ctl = RepairController(fleet, RepairConfig(reorder=True))
+            report = ctl.repair_quality("e", lo, hi)
+            assert report.ok, report.error
+            assert report.fitness_before < CANARY_MIN_FITNESS  # was degraded
+            assert report.fitness_after >= pre_fitness - 0.05
+            assert report.refit_entries > 0
+            assert report.refit_entries_per_sec > 0
+
+            # untouched ranges: bit-identical after the patch lands
+            # (refresh cleared the injected noise with the old epoch)
+            out = fleet.decode_at("e", all_idx[outside])
+            assert np.array_equal(out, ref_outside)
+            # repaired range: the refit recovers TRUTH where truth exists
+            # (the held-out sample — everywhere else the degraded decode
+            # was the best available estimate, so noise bakes in there)
+            oc = container.open_container(path)
+            try:
+                sel = (oc.heldout.indices >= lo) & (oc.heldout.indices < hi)
+                h_idx = oc.heldout.indices[sel].copy()
+                h_vals = oc.heldout.values[sel].copy()
+            finally:
+                oc.close()
+            assert len(h_idx) > 4
+            hat = fleet.decode_at("e", flat_to_multi(h_idx, SHAPE))
+            assert _fitness(h_vals, np.asarray(hat, np.float64)) >= \
+                pre_fitness - 0.05
+        finally:
+            fleet.close()
+
+    def test_bad_ranges_fail_cleanly(self, payload):
+        path, _ = payload
+        fleet = FleetFrontend(["i0"], replication=1)
+        try:
+            fleet.load_stream("e", path, tile_entries=256)
+            ctl = RepairController(fleet)
+            assert not ctl.repair_quality("e", 10, 10).ok   # empty
+            assert not ctl.repair_quality("e", -4, 10).ok   # negative
+            small = RepairController(
+                fleet, RepairConfig(max_patch_entries=8)
+            ).repair_quality("e", 0, 256)
+            assert not small.ok and "max_patch_entries" in small.error
+        finally:
+            fleet.close()
+
+    def test_canary_ticket_to_repair_local(self, payload, fault_injector):
+        """End-to-end on LocalTransport: injected regression -> canary
+        breach -> quality ticket -> online refit -> untouched entries
+        bit-identical during AND after the in-flight repair."""
+        path, _ = payload
+        single = CodecService()
+        single.load_stream("e", path, tile_entries=256)
+        batches = _batches()
+        reference = [single.decode_at("e", idx) for idx in batches]
+
+        fleet = FleetFrontend(
+            ["i0", "i1", "i2"], replication=2,
+            canary_fraction=1.0, canary_min_fitness=CANARY_MIN_FITNESS,
+        )
+        try:
+            fleet.load_stream("e", path, tile_entries=256)
+            lo, hi = _chunk_range(path, 2)
+            for t in fleet.transports.values():
+                fault_injector(t, noise=[f"e:{lo}:{hi}:0.4:5"])
+
+            def untouched(idx):
+                flat = np.ravel_multi_index(tuple(idx.T), SHAPE)
+                return (flat < lo) | (flat >= hi)
+
+            def serve_round():
+                for k, idx in enumerate(batches):
+                    out = fleet.decode_at("e", idx)
+                    keep = untouched(idx)
+                    assert np.array_equal(out[keep], reference[k][keep])
+                assert not fleet.failed, fleet.failed
+
+            ctl = RepairController(fleet)
+            quality = []
+            for _ in range(8):  # canary sampling is per-call deterministic
+                serve_round()  # untouched stays exact while damage is live
+                quality = [t for t in ctl.poll() if t.kind == "quality"]
+                if quality:
+                    break
+            assert quality, "canary never fired on the injected regression"
+            assert (quality[0].entry_start, quality[0].entry_stop) == (lo, hi)
+
+            reports = ctl.run()
+            refit = next(r for r in reports if r.kind == "quality")
+            assert refit.ok, refit.error
+            assert refit.fitness_after > refit.fitness_before
+            serve_round()  # untouched ranges exact after the swap too
+        finally:
+            fleet.close()
+
+    def test_canary_ticket_to_repair_socket(self, payload):
+        """Same loop over REAL worker processes, with the fitness fault
+        installed at spawn through the --debug-fitness-noise CLI flag
+        (the drill covers --debug-corrupt-chunk; this covers the other
+        worker fault flag end to end)."""
+        path, _ = payload
+        lo, hi = _chunk_range(path, 2)
+        single = CodecService()
+        single.load_stream("e", path, tile_entries=256)
+        batches = _batches()
+        reference = [single.decode_at("e", idx) for idx in batches]
+
+        def factory(iid):
+            return SocketTransport.spawn(
+                iid,
+                timeout=60.0,
+                canary_fraction=1.0,
+                canary_min_fitness=CANARY_MIN_FITNESS,
+                debug_fitness_noise=[f"e:{lo}:{hi}:0.4:5"],
+            )
+
+        fleet = FleetFrontend(["w0", "w1"], transport_factory=factory,
+                              replication=2)
+        try:
+            fleet.load_stream("e", path, tile_entries=256)
+
+            def untouched(idx):
+                flat = np.ravel_multi_index(tuple(idx.T), SHAPE)
+                return (flat < lo) | (flat >= hi)
+
+            def serve_round():
+                for k, idx in enumerate(batches):
+                    out = fleet.decode_at("e", idx)
+                    keep = untouched(idx)
+                    assert np.array_equal(out[keep], reference[k][keep])
+                assert not fleet.failed, fleet.failed
+
+            ctl = RepairController(fleet)
+            quality = []
+            for _ in range(8):
+                serve_round()
+                quality = [t for t in ctl.poll() if t.kind == "quality"]
+                if quality:
+                    break
+            assert quality, "canary never fired across the wire"
+            assert (quality[0].entry_start, quality[0].entry_stop) == (lo, hi)
+
+            reports = ctl.run()
+            refit = next(r for r in reports if r.kind == "quality")
+            assert refit.ok, refit.error
+            assert refit.fitness_after > refit.fitness_before
+            serve_round()  # untouched ranges exact after the swap
+        finally:
+            fleet.close()
+
+    def test_versioned_payload_rejected(self, tmp_path):
+        path = str(tmp_path / "v4.tcdc")
+        data = drifting_versions(SHAPE, 3, drift=0.05, noise=0.02, seed=5)
+        with VersionedStore.create(
+            path, "ttd", keyframe_interval=4, chunk_bytes=2048,
+            keyframe_opts={"max_rank": 4}, delta_opts={"max_rank": 2},
+        ) as s:
+            for x in data:
+                s.append(x)
+        fleet = FleetFrontend(["i0"], replication=1)
+        try:
+            fleet.load_stream("e", path, tile_entries=256)
+            report = RepairController(fleet).repair_quality("e", 0, 64)
+            assert not report.ok and "versioned" in report.error
+        finally:
+            fleet.close()
+
+
+# ------------------------------------------------------------ v4 delta chains
+class TestKeyframeRepairRevalidatesChains:
+    N_VERSIONS = 5
+
+    @pytest.fixture()
+    def v4(self, tmp_path):
+        path = str(tmp_path / "chain.tcdc")
+        data = drifting_versions(
+            SHAPE, self.N_VERSIONS, drift=0.05, noise=0.02, seed=5
+        )
+        with VersionedStore.create(
+            path, "ttd", keyframe_interval=4, chunk_bytes=2048,
+            keyframe_opts={"max_rank": 4}, delta_opts={"max_rank": 2},
+        ) as s:
+            for x in data:
+                s.append(x)
+        return path, data
+
+    def test_revalidate_clean_and_corrupt(self, v4):
+        """On-disk rot in a keyframe chunk fails EVERY dependent chain,
+        not just the keyframe's own version."""
+        path, data = v4
+        truth = {v: x for v, x in enumerate(data)}
+        health = revalidate_chains(path, truth=truth)
+        assert len(health) == self.N_VERSIONS
+        assert all(h.ok for h in health)
+        assert all(h.fitness is not None and h.fitness > 0.5 for h in health)
+        # chains: v0 keyframe <- v1 <- v2 <- v3; v4 fresh keyframe
+        assert health[3].chain[0] == 0 and len(health[3].chain) == 4
+        assert health[4].chain == [4]
+
+        _, chunks, versions = container.container_index(path)
+        kf = versions[0]
+        c = chunks[kf.chunk_start]  # first chunk of keyframe 0's payload
+        with open(path, "r+b") as f:
+            f.seek(c.offset + c.length // 2)
+            b = f.read(1)
+            f.seek(c.offset + c.length // 2)
+            f.write(bytes([b[0] ^ 0xFF]))
+        health = revalidate_chains(path)
+        by_v = {h.version: h for h in health}
+        for v in range(4):  # keyframe 0 and every delta decoding through it
+            assert not by_v[v].ok, v
+            assert by_v[v].error
+        assert by_v[4].ok  # the independent keyframe is untouched
+
+    def test_keyframe_restore_revalidates_dependents(self, v4, fault_injector):
+        """Corruption repair of a keyframe chunk on a v4 payload restores
+        the bytes from a donor AND re-validates every version chain before
+        reporting ok; all versions decode bit-identically afterwards."""
+        path, _ = v4
+        _, chunks, versions = container.container_index(path)
+        kf_chunk = int(versions[0].chunk_start)
+
+        fleet = FleetFrontend(["i0", "i1"], replication=2)
+        try:
+            fleet.load_stream("e", path, tile_entries=256)
+            probe = np.stack(
+                [np.arange(8) % s for s in SHAPE], axis=1
+            ).astype(np.int64)
+            reference = [
+                fleet.decode_at("e", probe, version=v)
+                for v in range(self.N_VERSIONS)
+            ]
+
+            fault_injector(fleet.transports["i0"], corrupt=[f"e:{kf_chunk}"])
+            with pytest.raises(ValueError):
+                # any chain through keyframe 0 needs the corrupt chunk
+                fleet.services["i0"].decode_at("e", probe, version=0)
+            assert fleet.transports["i0"].stats()["quarantine"]
+
+            ctl = RepairController(fleet)
+            tickets = ctl.poll()
+            assert [t.chunk for t in tickets] == [kf_chunk]
+            [report] = ctl.run()
+            assert report.ok, report.error
+            assert report.chunks_restored == [kf_chunk]
+            assert report.donors[kf_chunk] == "i1"
+            assert report.chains_revalidated == self.N_VERSIONS
+
+            for v in range(self.N_VERSIONS):
+                out = fleet.decode_at("e", probe, version=v)
+                assert np.array_equal(out, reference[v]), f"version {v}"
+            assert not ctl.poll()
+        finally:
+            fleet.close()
+
+
+# ------------------------------------------------------------------- helpers
+class TestRangeShape:
+    @pytest.mark.parametrize("n", [1, 2, 7, 97, 256, 384, 1536, 4096, 30030])
+    def test_product_and_balance(self, n):
+        dims = _range_shape(n)
+        assert int(np.prod(dims)) == max(n, 1)
+        assert 1 <= len(dims) <= 3
+        assert all(d > 1 for d in dims) or dims == (max(n, 1),)
+
+    def test_prime_falls_back_to_1d(self):
+        assert _range_shape(7) == (7,)
+        assert _range_shape(9973) == (9973,)
+
+    def test_nearest_divisor(self):
+        assert _nearest_divisor(12, 3) == 3
+        assert _nearest_divisor(12, 5) == 4      # 4 and 6 tie, lower wins
+        assert _nearest_divisor(7, 3) == 1       # prime: only trivial divisors
+        assert _nearest_divisor(100, 1000) == 100  # target clamped to n
+
+
+# --------------------------------------------------- mid-stream order refine
+class TestRefineOrders:
+    SHAPE = (8, 6, 4)
+
+    def _fitter(self, **kw):
+        kw.setdefault("rank", 6)
+        kw.setdefault("steps_per_slab", 8)
+        kw.setdefault("batch_size", 192)
+        kw.setdefault("lr", 1e-2)
+        return NTTDStreamFitter(self.SHAPE, seed=0, **kw)
+
+    def _feed(self, fitter, x, passes=1):
+        n = int(np.prod(self.SHAPE))
+        idx = flat_to_multi(np.arange(n, dtype=np.int64), self.SHAPE)
+        for _ in range(passes):
+            fitter.update(idx, x.ravel())
+        return idx
+
+    def test_empty_reservoir_raises(self):
+        with pytest.raises(ValueError, match="empty reservoir"):
+            self._fitter().refine_orders()
+
+    def test_shape_mismatch_raises(self):
+        f = self._fitter()
+        self._feed(f, np.zeros(self.SHAPE, np.float32))
+        with pytest.raises(ValueError, match="shape"):
+            f.refine_orders(np.zeros((3, 3), np.float32))
+
+    def test_orders_are_permutations_and_reservoir_remaps(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=self.SHAPE).astype(np.float32)
+        f = self._fitter()
+        self._feed(f, x)
+        before = f._reservoir_orig().copy()
+        orders = f.refine_orders()
+        for k, s in enumerate(self.SHAPE):
+            assert np.array_equal(np.sort(orders[k]), np.arange(s))
+        # the reservoir's ORIGINAL-index view survives the remap exactly
+        assert np.array_equal(f._reservoir_orig(), before)
+        assert f._inv is not None
+        # a second refinement round-trips through non-identity orders
+        f.refine_orders(x)
+        assert np.array_equal(f._reservoir_orig(), before)
+
+    def test_training_continues_warm_after_refine(self):
+        rng = np.random.default_rng(1)
+        # mode-0 slices shuffled so identity order is deliberately bad
+        i, j, k = np.meshgrid(*[np.arange(s) for s in self.SHAPE], indexing="ij")
+        x = np.sin(0.4 * i + 0.3 * j + 0.5 * k).astype(np.float32)
+        x = x[rng.permutation(self.SHAPE[0])]
+        f = self._fitter()
+        idx = self._feed(f, x, passes=2)
+        seen = f.entries_seen
+        f.refine_orders()
+        self._feed(f, x, passes=6)  # same ORIGINAL indices, post-refine
+        assert f.entries_seen == seen + 6 * int(np.prod(self.SHAPE))
+        enc = f.finalize()
+        hat = np.asarray(enc.decode_at(idx), np.float64)
+        assert np.all(np.isfinite(hat))
+        assert _fitness(x.ravel(), hat) > 0.3
